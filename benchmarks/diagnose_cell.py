@@ -1,0 +1,46 @@
+"""Perf-iteration diagnostic: top FLOP/byte/collective contributors
+for one (arch x shape) cell.
+
+    PYTHONPATH=src python benchmarks/diagnose_cell.py <arch> <shape> [ga]
+    REPRO_CAUSAL_IMPL=triangle ... to flip the causal implementation.
+"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.launch import dryrun as DR
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.train import train_step as TS
+from repro.optim import adamw
+from repro.core import hlo_flops as HF
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+ga = int(sys.argv[3]) if len(sys.argv) > 3 else 0
+if ga <= 0: ga = DR.GRAD_ACCUM_DEFAULTS.get((arch, shape_name), 1)
+from repro.models import attention as ATT
+ATT.set_causal_impl(os.environ.get("REPRO_CAUSAL_IMPL", "masked"))
+cfg = get_config(arch); shape = SHAPES[shape_name]
+mesh = make_production_mesh()
+with mesh:
+    params_abs, cache_abs = DR.abstract_state(cfg, shape, shape.kind)
+    specs = DR.input_specs(cfg, shape)
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(state_dtype=DR.OPT_DTYPE_DEFAULTS.get(arch, "float32"))
+        step, _ = TS.make_train_step(cfg, shape, mesh, opt_cfg=opt_cfg, grad_accum=ga)
+        opt_abs = jax.eval_shape(lambda p: adamw.init_state(p, opt_cfg), params_abs)
+        lowered = step.lower(params_abs, opt_abs, specs, jax.ShapeDtypeStruct((), jax.numpy.int32))
+    elif shape.kind == "prefill":
+        step, _ = TS.make_prefill_step(cfg, shape, mesh)
+        lowered = step.lower(params_abs, specs)
+    else:
+        step, _ = TS.make_serve_step(cfg, shape, mesh)
+        lowered = step.lower(params_abs, cache_abs, specs["tokens"], specs["pos"])
+    comp = lowered.compile()
+txt = comp.as_text()
+s = HF.analyze_hlo(txt)
+print(f"flops/dev {s['flops']:.4g}  bytes/dev {s['bytes_accessed']:.4g}")
+print("collectives:", {k: f"{v:.3g}" for k, v in s["collective_bytes"].items()})
+for kind in ("collective", "bytes", "flops"):
+    print(f"== top {kind} ==")
+    for v, desc in HF.top_contributors(txt, kind, k=8):
+        print(f"  {v:10.3e}  {desc}")

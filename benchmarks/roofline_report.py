@@ -1,0 +1,66 @@
+"""Render the EXPERIMENTS.md roofline tables from dry-run records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        [--dir experiments/dryrun] [--out experiments/roofline_table.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.core.analyzer import analyze_record
+
+
+def load_records(d: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(analyze_record(json.load(f)))
+    return recs
+
+
+def table(recs, mesh_filter=None) -> str:
+    rows = [
+        "| arch | shape | mesh | ga | compute_s | memory_s | collective_s "
+        "| dominant | MODEL/HLO | MFU ceiling | HBM GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if mesh_filter and rec["mesh"] != mesh_filter:
+            continue
+        r = rec["roofline"]
+        mem = rec["memory"]
+        gb = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+              + mem["output_size_in_bytes"]
+              - mem.get("alias_size_in_bytes", 0)) / 2 ** 30
+        rows.append(
+            "| {a} | {s} | {m} | {ga} | {c:.3e} | {mm:.3e} | {k:.3e} | "
+            "{dom} | {ratio:.2f} | {mfu:.2%} | {gb:.1f} |".format(
+                a=rec["arch"], s=rec["shape"], m=rec["mesh"],
+                ga=rec.get("grad_accum", 1), c=r["compute_s"],
+                mm=r["memory_s"], k=r["collective_s"], dom=r["dominant"],
+                ratio=r["useful_compute_ratio"],
+                mfu=r["mfu_upper_bound"], gb=gb))
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline_table.md")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    md = ["## Single-pod (16x16 = 256 chips)", "",
+          table(recs, "16x16"), "",
+          "## Multi-pod (2x16x16 = 512 chips)", "",
+          table(recs, "2x16x16"), ""]
+    out = "\n".join(md)
+    with open(args.out, "w") as f:
+        f.write(out)
+    print(f"wrote {args.out} ({len(recs)} records)")
+
+
+if __name__ == "__main__":
+    main()

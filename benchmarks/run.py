@@ -1,0 +1,101 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  stream      beta measurement (paper Section IV-B)
+  table5      SpMM GFLOP/s across implementations x matrices x d
+  fig2        attained vs sparsity-aware roofline + paper-claims check
+  kernels     Pallas kernel wall-time (interpret mode; correctness-scale)
+  roofline    per-(arch x shape x mesh) three-term table from the dry-run
+              records in experiments/dryrun (if present)
+
+Prints ``name,us_per_call,derived`` CSV rows plus the full SpMM CSV to
+benchmarks/out/.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+
+def _emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}")
+
+
+def bench_stream() -> float:
+    from benchmarks.stream import measure_bandwidth
+    t0 = time.perf_counter()
+    bw = measure_bandwidth(n_bytes=128 * 2 ** 20, repeats=3)
+    _emit("stream.copy", (time.perf_counter() - t0) * 1e6,
+          f"{bw['copy'] / 1e9:.2f}GB/s")
+    _emit("stream.triad", (time.perf_counter() - t0) * 1e6,
+          f"{bw['triad'] / 1e9:.2f}GB/s")
+    return bw["triad"]
+
+
+def bench_spmm(beta: float) -> None:
+    from benchmarks.spmm_suite import paper_claims_check, run_suite, to_csv
+    # scale=16 (n=65,536): B and C at d=64 are 16 MB each, so the working
+    # set exceeds this host's LLC — the paper's out-of-cache regime
+    # (Section IV-A "matrices were selected to exceed on-chip caches").
+    results = run_suite(beta, scale=16)
+    os.makedirs("benchmarks/out", exist_ok=True)
+    with open("benchmarks/out/table5_spmm.csv", "w") as f:
+        f.write(to_csv(results))
+    for r in results:
+        if r.d in (1, 64):
+            _emit(f"table5.{r.matrix}.{r.impl}.d{r.d}",
+                  2.0 * r.nnz * r.d / max(r.gflops, 1e-9) / 1e3,
+                  f"{r.gflops:.2f}GF/s;roof={r.roofline_fraction:.2f}")
+    claims = paper_claims_check(results)
+    for k, v in claims.items():
+        _emit(f"fig2.claim.{k}", 0.0, "PASS" if v else "FAIL")
+
+
+def bench_kernels() -> None:
+    import jax.numpy as jnp
+    import numpy as np
+    import jax
+    from repro import kernels, sparse
+    from repro.core import blocked as gen_blocked
+    m = gen_blocked(512, t=32, num_blocks=120, nnz_per_block=60, seed=0)
+    a = sparse.coo_to_bcsr(m, 32)
+    b = jnp.asarray(np.random.default_rng(0).normal(
+        size=(512, 64)).astype(np.float32))
+    out = kernels.bcsr_spmm(a, b, block_d=64)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    jax.block_until_ready(kernels.bcsr_spmm(a, b, block_d=64))
+    us = (time.perf_counter() - t0) * 1e6
+    roof = kernels.bcsr_kernel_roofline(a, 64)
+    _emit("kernels.bcsr_spmm.interp", us,
+          f"ai={roof.ai:.2f};mxu_util={roof.mxu_utilization:.2f}")
+    g = kernels.grouped_matmul_roofline(4096, 4096, 1536, 128)
+    _emit("kernels.grouped_matmul.model", 0.0,
+          f"ai={g.ai:.1f};attainable={g.attainable_flops_per_s/1e12:.0f}TF")
+
+
+def bench_roofline_table() -> None:
+    from repro.core.analyzer import analyze_record
+    paths = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not paths:
+        _emit("roofline.table", 0.0, "SKIP-no-dryrun-records")
+        return
+    for p in paths:
+        rec = analyze_record(json.load(open(p)))
+        r = rec["roofline"]
+        _emit(f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+              r["step_time_lower_bound_s"] * 1e6,
+              f"dom={r['dominant']};mfu_ceil={r['mfu_upper_bound']:.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    beta = bench_stream()
+    bench_spmm(beta)
+    bench_kernels()
+    bench_roofline_table()
+
+
+if __name__ == "__main__":
+    main()

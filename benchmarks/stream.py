@@ -1,0 +1,43 @@
+"""STREAM-style bandwidth measurement (paper Section IV-B).
+
+The paper measures beta = 122.6 GB/s on the Perlmutter socket with STREAM;
+we measure the same quantity on this host so the roofline ceilings are
+grounded in measured bandwidth, not guesses.  Triad (a = b + s*c) is the
+canonical figure; copy is reported for reference.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def measure_bandwidth(n_bytes: int = 256 * 2 ** 20, repeats: int = 5):
+    """Returns dict with copy/triad bandwidths in bytes/s."""
+    n = n_bytes // 8
+    a = np.zeros(n)
+    b = np.random.default_rng(0).random(n)
+    c = np.random.default_rng(1).random(n)
+
+    def timed(fn, traffic):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return traffic / best
+
+    copy_bw = timed(lambda: np.copyto(a, b), 2 * n * 8)
+
+    def triad():
+        np.multiply(c, 3.0, out=a)
+        np.add(a, b, out=a)
+
+    triad_bw = timed(triad, 3 * n * 8)
+    return {"copy": copy_bw, "triad": triad_bw}
+
+
+if __name__ == "__main__":
+    bw = measure_bandwidth()
+    print(f"copy  {bw['copy'] / 1e9:.2f} GB/s")
+    print(f"triad {bw['triad'] / 1e9:.2f} GB/s")

@@ -1,0 +1,53 @@
+"""MoE expert FFN as block-diagonal BCSR SpMM (the paper's blocked regime).
+
+Routes a token batch with a top-k router, sorts tokens by expert into
+128-row blocks, runs the grouped_matmul Pallas kernel, checks it against
+the one-hot oracle, and prints the sparsity-aware roofline placement.
+
+    PYTHONPATH=src python examples/moe_block_sparse.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kernels
+from repro.kernels import ref
+
+E, K_DIM, N_DIM, TOKENS, TOPK, BM = 8, 64, 128, 1024, 2, 128
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(TOKENS, K_DIM)).astype(np.float32))
+w = jnp.asarray(rng.normal(size=(E, K_DIM, N_DIM)).astype(np.float32))
+router = jnp.asarray(rng.normal(size=(K_DIM, E)).astype(np.float32))
+
+# Route and sort tokens by expert (MegaBlocks-style block alignment).
+probs = jax.nn.softmax(x @ router, axis=-1)
+expert = jnp.argmax(probs, axis=-1)            # top-1 for the demo
+order = jnp.argsort(expert)
+x_sorted = x[order]
+# Block-align: pad each expert segment up to a BM multiple.
+counts = np.bincount(np.asarray(expert), minlength=E)
+blocks, gids, rows = [], [], []
+for e in range(E):
+    seg = np.asarray(order)[np.asarray(expert)[np.asarray(order)] == e]
+    n_blocks = max(1, -(-len(seg) // BM))
+    padded = np.zeros((n_blocks * BM, K_DIM), np.float32)
+    padded[:len(seg)] = np.asarray(x)[seg]
+    blocks.append(padded)
+    gids.extend([e] * n_blocks)
+    rows.append(seg)
+xb = jnp.asarray(np.concatenate(blocks))
+gid = jnp.asarray(np.asarray(gids, np.int32))
+
+out = kernels.grouped_matmul(xb, w, gid, bm=BM, bk=64, bn=128)
+expect = ref.grouped_matmul_ref(xb, w, gid, bm=BM)
+np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                           rtol=2e-3, atol=2e-3)
+roof = kernels.grouped_matmul_roofline(xb.shape[0], K_DIM, N_DIM, E)
+print(f"tokens routed to {E} experts; buffer {xb.shape[0]} rows "
+      f"({xb.shape[0] - TOKENS} block padding)")
+print(f"kernel allclose OK; AI={roof.ai:.1f} FLOP/B, "
+      f"MXU utilization={roof.mxu_utilization:.2f}, "
+      f"attainable {roof.attainable_flops_per_s / 1e12:.0f} TF/s on v5e")
+print("(cf. paper Eq. 4: block-diagonal dispatch => z = t, the best case "
+      "of the blocked-sparsity regime)")

@@ -1,0 +1,43 @@
+"""Quickstart: the paper's core loop in ~40 lines.
+
+Generate one matrix per sparsity regime, classify its structure, evaluate
+the matching sparsity-aware AI model, and compare the predicted roofline
+ceiling with measured SpMM throughput.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sparse
+from repro.core import banded, blocked, classify, erdos_renyi, scale_free
+
+BETA = 8.5e9      # measure with `python -m benchmarks.run` (STREAM triad)
+N, D = 2 ** 14, 16
+
+matrices = {
+    "er (random)": erdos_renyi(N, 10, seed=0),
+    "ideal_diagonal": banded(N, 1, seed=1),
+    "fem blocks": blocked(N, t=32, num_blocks=N // 16, nnz_per_block=320,
+                          seed=2),
+    "powerlaw": scale_free(N, 16, alpha=2.2, seed=3),
+}
+
+b = jnp.asarray(np.random.default_rng(0).normal(size=(N, D)), jnp.float32)
+print(f"{'matrix':16s} {'regime':11s} {'AI':>6s} {'pred GF/s':>9s} "
+      f"{'meas GF/s':>9s} {'frac':>5s}")
+for name, m in matrices.items():
+    report = classify(m)
+    ai = report.traffic(D, sizeof_val=4).ai
+    csr = sparse.coo_to_csr(m)
+    jax.block_until_ready(sparse.csr_spmm(csr, b))   # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(sparse.csr_spmm(csr, b))
+    dt = time.perf_counter() - t0
+    gf = 2 * m.nnz * D / dt / 1e9
+    pred = BETA * ai / 1e9
+    print(f"{name:16s} {report.regime:11s} {ai:6.3f} {pred:9.2f} "
+          f"{gf:9.2f} {gf / pred:5.2f}")

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a small LM for a few hundred steps with the
+full production substrate (pipeline -> pjit-able step -> checkpointing ->
+straggler watchdog), then resume from the checkpoint to prove restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Default config is a ~2M-param llama-style model so 200 steps finish in
+minutes on one CPU core; pass --arch/--steps to scale up (the same driver
+trains the assigned full configs on a real slice).
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config(args.arch).reduced(),
+        num_layers=4, d_model=128, num_heads=4, head_dim=32, d_ff=512,
+        vocab_size=2048)
+    shape = ShapeConfig("example", seq_len=128, global_batch=8,
+                        kind="train")
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_train_")
+    tcfg = TrainerConfig(
+        ckpt_dir=ckpt_dir, ckpt_every=50,
+        schedule_kwargs={"warmup_steps": 20, "total_steps": args.steps})
+    trainer = Trainer(cfg, shape, tcfg,
+                      opt_cfg=adamw.AdamWConfig(lr=1e-3),
+                      data_cfg=DataConfig(seed=0))
+    trainer.init_or_restore()
+    print(f"params={cfg.param_count() / 1e6:.2f}M  tokens/step="
+          f"{shape.seq_len * shape.global_batch}")
+    trainer.run(args.steps, stop_after=args.steps // 2)
+    mid_losses = [h["loss"] for h in trainer.history]
+    print(f"pre-restart: step {trainer.history[-1]['step']} "
+          f"loss {mid_losses[-1]:.3f}")
+
+    # Simulated preemption: a NEW trainer resumes from the checkpoint.
+    resumed = Trainer(cfg, shape, tcfg,
+                      opt_cfg=adamw.AdamWConfig(lr=1e-3),
+                      data_cfg=DataConfig(seed=0))
+    resumed.init_or_restore()
+    print(f"resumed at step {resumed.start_step}")
+    resumed.run(args.steps)
+    losses = mid_losses + [h["loss"] for h in resumed.history]
+    k = max(len(losses) // 10, 1)
+    print(f"loss: first10%={sum(losses[:k]) / k:.3f} "
+          f"last10%={sum(losses[-k:]) / k:.3f}")
+    assert sum(losses[-k:]) / k < sum(losses[:k]) / k, "loss did not drop"
+    print("OK: trained, checkpointed, restarted, loss decreased")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Architecture and experiment configs."""
+from repro.configs.base import (
+    ARCH_MODULES, ModelConfig, SHAPES, ShapeConfig, all_cells, get_config,
+    list_archs, register,
+)
+__all__ = ["ARCH_MODULES", "ModelConfig", "SHAPES", "ShapeConfig",
+           "all_cells", "get_config", "list_archs", "register"]

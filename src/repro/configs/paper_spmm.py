@@ -1,0 +1,22 @@
+"""The paper's own experiment configuration (Tables III-V).
+
+Defines the matrix suite, dense widths d, and the implementations compared,
+at a scale runnable on this container while preserving the out-of-cache
+regime the paper requires.
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SpMMExperimentConfig:
+    scale: int = 16                  # log2(n) for the generated suite
+    d_values: Tuple[int, ...] = (1, 4, 16, 64)
+    implementations: Tuple[str, ...] = ("csr", "ell", "bcsr")
+    bcsr_block: int = 64             # t for the CSB-analogue
+    dtype: str = "float32"           # paper uses float64; fp32 on this host
+    repeats: int = 5                 # timing repeats (min is reported)
+    hub_fraction: float = 0.001      # paper: f = 0.1% of nodes
+
+
+CONFIG = SpMMExperimentConfig()

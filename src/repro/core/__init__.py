@@ -1,0 +1,29 @@
+"""Core contribution: sparsity-aware roofline models for SpMM."""
+from repro.core.hardware import HardwareSpec, PERLMUTTER_MILAN, TPU_V5E, by_name
+from repro.core.roofline import DistributedRoofline, RooflinePoint, place
+from repro.core.sparsity_models import (
+    TrafficBreakdown,
+    ai_blocked,
+    ai_blocked_tpu,
+    ai_diagonal,
+    ai_random,
+    ai_scale_free,
+    arithmetic_intensity,
+    expected_occupied_columns,
+    flops_spmm,
+    hub_edge_fraction,
+    mxu_utilization,
+)
+from repro.core.patterns import COOMatrix, banded, blocked, erdos_renyi, scale_free
+from repro.core.classify import StructureReport, classify
+
+__all__ = [
+    "HardwareSpec", "PERLMUTTER_MILAN", "TPU_V5E", "by_name",
+    "DistributedRoofline", "RooflinePoint", "place",
+    "TrafficBreakdown", "ai_blocked", "ai_blocked_tpu", "ai_diagonal",
+    "ai_random", "ai_scale_free", "arithmetic_intensity",
+    "expected_occupied_columns", "flops_spmm", "hub_edge_fraction",
+    "mxu_utilization",
+    "COOMatrix", "banded", "blocked", "erdos_renyi", "scale_free",
+    "StructureReport", "classify",
+]

@@ -1,0 +1,113 @@
+"""Tie the dry-run artifacts to the sparsity-aware roofline report.
+
+Input records are produced by ``repro.launch.dryrun`` (one JSON dict per
+(arch x shape x mesh) cell) and contain per-device HLO cost, memory and
+collective-byte figures plus the model-level useful-FLOP estimate.
+
+This module converts each record into the three-term distributed roofline
+(``repro.core.roofline.DistributedRoofline``), attaches the paper's
+sparsity-aware corrections for sparse model components (MoE dispatch =
+blocked regime, sliding-window attention = diagonal/banded regime), and
+renders the EXPERIMENTS.md tables.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+from repro.core.hardware import TPU_V5E, HardwareSpec
+from repro.core.roofline import DistributedRoofline
+from repro.core import sparsity_models as sm
+
+
+def analyze_record(record: Dict, hw: HardwareSpec = TPU_V5E) -> Dict:
+    """Merge a dry-run record with derived roofline terms."""
+    chips = int(record["chips"])
+    flops_dev = float(record["cost"]["flops_per_device"])
+    bytes_dev = float(record["cost"]["bytes_per_device"])
+    coll_dev = float(record.get("collectives", {}).get("total", 0.0))
+    model_flops = float(record.get("model_flops", 0.0))
+
+    roof = DistributedRoofline(
+        name=f"{record['arch']}/{record['shape']}/{record['mesh']}",
+        chips=chips,
+        hlo_flops=flops_dev * chips,
+        hlo_bytes=bytes_dev * chips,
+        collective_bytes=coll_dev * chips,
+        hardware=hw,
+        model_flops=model_flops,
+    )
+    out = dict(record)
+    out["roofline"] = roof.as_dict()
+    out["roofline"]["hint"] = bottleneck_hint(roof, record)
+    sparse = record.get("sparse_components")
+    if sparse:
+        out["sparsity_corrections"] = [
+            sparse_component_ai(c) for c in sparse]
+    return out
+
+
+def sparse_component_ai(component: Dict) -> Dict:
+    """Apply the paper's AI model to one sparse model component.
+
+    Components are emitted by the model zoo:
+      MoE expert FFN  -> blocked_tpu regime (block-diagonal BCSR SpMM)
+      sliding-window  -> diagonal regime (banded attention map)
+      full attention  -> random regime upper-bounds an unstructured map
+    """
+    regime = component["regime"]
+    kwargs = {k: component[k] for k in ("t", "num_blocks", "alpha",
+                                        "hub_fraction") if k in component}
+    tb = sm.arithmetic_intensity(
+        regime, component["n"], component["nnz"], component["d"],
+        sizeof_val=component.get("sizeof_val", 2), **kwargs)
+    out = {
+        "name": component["name"],
+        "regime": regime,
+        "ai": tb.ai,
+        "flops": tb.flops,
+        "bytes": tb.total_bytes,
+        "attainable_flops_per_s": TPU_V5E.attainable(tb.ai),
+    }
+    if regime == "blocked_tpu":
+        out["mxu_utilization"] = sm.mxu_utilization(
+            component["nnz"], component["t"], component["num_blocks"])
+    return out
+
+
+def bottleneck_hint(roof: DistributedRoofline, record: Dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    dom = roof.dominant
+    if dom == "compute":
+        ratio = roof.useful_compute_ratio
+        if ratio < 0.5:
+            return ("compute-bound with useful ratio "
+                    f"{ratio:.2f}: cut remat recompute / fuse gather-einsums "
+                    "before touching sharding")
+        return ("compute-bound near useful peak: only faster kernels "
+                "(MXU-aligned BCSR tiles, fused attention) help")
+    if dom == "memory":
+        return ("memory-bound: raise AI — larger per-device batch/tiles, "
+                "bf16 weights/activations, KV-cache quantization, or the "
+                "paper's blocked layout to cut B traffic")
+    return ("collective-bound: reshard to cut all-gather volume (FSDP->TP "
+            "boundary), overlap via async collectives, or compress "
+            "cross-pod gradients (int8)")
+
+
+def format_roofline_table(records: Iterable[Dict]) -> str:
+    """Markdown table for EXPERIMENTS.md Section Roofline."""
+    rows: List[str] = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | MODEL/HLO | MFU ceiling |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        r = rec["roofline"]
+        rows.append(
+            "| {arch} | {shape} | {mesh} | {c:.3e} | {m:.3e} | {k:.3e} | "
+            "{dom} | {ratio:.2f} | {mfu:.2%} |".format(
+                arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                c=r["compute_s"], m=r["memory_s"], k=r["collective_s"],
+                dom=r["dominant"], ratio=r["useful_compute_ratio"],
+                mfu=r["mfu_upper_bound"]))
+    return "\n".join(rows)

@@ -1,0 +1,72 @@
+"""Hardware descriptions used by the roofline models.
+
+The paper's testbed is one socket of an AMD EPYC 7763 (Perlmutter CPU node);
+our deployment target is a TPU v5e pod slice.  Both are expressed with the
+same dataclass so every roofline routine is hardware-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Architectural ceilings for a single device (chip / socket)."""
+
+    name: str
+    peak_flops: float          # FLOP/s (per device) at the relevant precision
+    hbm_bandwidth: float       # bytes/s main-memory bandwidth (per device)
+    link_bandwidth: float      # bytes/s per inter-device link (0 => none)
+    vmem_bytes: int = 0        # software-managed fast memory (VMEM / LLC)
+    hbm_bytes: int = 0         # main memory capacity per device
+    mxu_tile: tuple = (128, 128)  # native matmul tile (rows, cols)
+
+    @property
+    def ridge_point(self) -> float:
+        """Arithmetic intensity where memory-bound meets compute-bound."""
+        return self.peak_flops / self.hbm_bandwidth
+
+    def attainable(self, ai: float) -> float:
+        """Classic roofline: P = min(beta * AI, pi)."""
+        return min(self.hbm_bandwidth * ai, self.peak_flops)
+
+
+# --- The paper's evaluation platform (Table IV + measured STREAM beta). ---
+PERLMUTTER_MILAN = HardwareSpec(
+    name="amd-epyc-7763-1socket",
+    peak_flops=64 * 2.45e9 * 16,      # 64 cores x 2.45 GHz x (AVX2 FMA: 16 dp flop/cyc)
+    hbm_bandwidth=122.6e9,            # STREAM-measured in the paper
+    link_bandwidth=0.0,
+    vmem_bytes=256 * 2**20,           # 256 MiB L3 per socket
+    hbm_bytes=512 * 2**30,
+    mxu_tile=(1, 4),                  # AVX2 dp vector as the "tile"
+)
+
+# --- Deployment target: TPU v5e (per chip), constants from the task spec. ---
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,                # bf16
+    hbm_bandwidth=819e9,
+    link_bandwidth=50e9,              # per ICI link
+    vmem_bytes=128 * 2**20,
+    hbm_bytes=16 * 2**30,
+    mxu_tile=(128, 128),
+)
+
+# Host CPU of this container (used only for wall-clock benchmark *context*;
+# beta is measured at runtime by benchmarks/stream.py, mirroring the paper).
+HOST_CPU = HardwareSpec(
+    name="container-host-cpu",
+    peak_flops=50e9,
+    hbm_bandwidth=10e9,               # placeholder; STREAM overrides at runtime
+    link_bandwidth=0.0,
+    vmem_bytes=32 * 2**20,
+    hbm_bytes=35 * 2**30,
+    mxu_tile=(1, 4),
+)
+
+
+def by_name(name: str) -> HardwareSpec:
+    table = {h.name: h for h in (PERLMUTTER_MILAN, TPU_V5E, HOST_CPU)}
+    table.update({"v5e": TPU_V5E, "milan": PERLMUTTER_MILAN, "host": HOST_CPU})
+    return table[name]

@@ -1,0 +1,151 @@
+"""Extract roofline inputs from a lowered/compiled XLA artifact.
+
+``compiled.cost_analysis()`` supplies HLO FLOPs and bytes accessed, but says
+nothing about collectives.  We recover collective traffic by parsing the HLO
+text: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` instruction contributes its operand
+bytes (the data each device injects into the interconnect).
+
+The parser is two-pass: pass 1 records every instruction's *result* shape;
+pass 2 resolves collective operands (which may be printed with or without
+inline shapes) against that table.  Async pairs (``-start``/``-done``) are
+counted once, on the ``-start``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e3m4": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1,
+}
+
+# dtype[d0,d1,...]{layout}  — layout part optional, dims may be empty (scalar)
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%name = <shape(s)> opcode(`  — opcode may carry -start suffix.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every shape token appearing in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        count = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    count *= int(d)
+        total += count * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective in an HLO module dump.
+
+    Returns a dict with one entry per collective kind plus ``total``.
+    Values are bytes *per partition/module* (the module is the per-device
+    SPMD program); multiply by device count for fleet-global traffic.
+    """
+    result_bytes: Dict[str, int] = {}
+    pending = []  # (opcode, operand_names, inline_operand_bytes)
+
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_part, opcode = m.group(1), m.group(2), m.group(3)
+        result_bytes[name] = _shape_bytes(result_part)
+
+        base = opcode
+        if base.endswith("-start"):
+            base = base[: -len("-start")]
+        if base.endswith("-done"):
+            continue  # counted at -start
+        if base not in _COLLECTIVE_OPS:
+            continue
+        # Operand section: between the first '(' after opcode and its match.
+        idx = line.find(opcode + "(")
+        operand_section = line[idx + len(opcode) + 1:]
+        depth = 1
+        out = []
+        for ch in operand_section:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out.append(ch)
+        operand_section = "".join(out)
+        inline = _shape_bytes(operand_section)
+        operand_names = re.findall(r"%([\w.\-]+)", operand_section)
+        pending.append((base, operand_names, inline))
+
+    totals: Dict[str, float] = defaultdict(float)
+    for base, operand_names, inline in pending:
+        if inline > 0:
+            nbytes = inline
+        else:
+            nbytes = sum(result_bytes.get(n, 0) for n in operand_names)
+        totals[base] += float(nbytes)
+    totals["total"] = float(sum(v for k, v in totals.items() if k != "total"))
+    return dict(totals)
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    """Number of collective instructions per kind (for redundancy hunting)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = opcode[:-len("-start")] if opcode.endswith("-start") else opcode
+        if base in _COLLECTIVE_OPS and not opcode.endswith("-done"):
+            counts[base] += 1
+    return dict(counts)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Flatten ``compiled.cost_analysis()`` to the fields we report.
+
+    XLA returns per-partition module costs: ``flops`` and ``bytes accessed``
+    describe ONE device's program.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    transcendentals = float(cost.get("transcendentals", 0.0))
+    return {"flops_per_device": flops, "bytes_per_device": byts,
+            "transcendentals_per_device": transcendentals}
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    """Per-device memory footprint from ``compiled.memory_analysis()``."""
+    mem = compiled.memory_analysis()
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"):
+        out[key] = float(getattr(mem, key, 0.0))
+    out["total_hbm_bytes"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"] - out.get("alias_size_in_bytes", 0.0))
+    return out

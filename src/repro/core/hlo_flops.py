@@ -1,0 +1,376 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-based program (layer stacks, flash-attention block loops, microbatch
+accumulation) is undercounted by the product of its trip counts.  This
+module re-derives the three roofline inputs directly from the post-SPMD HLO
+text with loop multipliers applied:
+
+  * dot FLOPs:       2 * prod(result dims) * prod(contracting dims)
+  * bytes accessed:  operand + result bytes of every *top-level* instruction
+                     (fusion/reduce internals excluded, mirroring XLA's own
+                     definition), times the enclosing loop multiplier
+  * collective bytes: operand bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute,
+                     times the loop multiplier
+
+Trip counts are read from each while's condition computation (jax lowers
+``lax.scan``/``fori_loop`` to ``iv < constant(N)``).  Conditional branches
+contribute the max over branches.  The model is validated against closed
+-form FLOP counts in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_instr(line: str):
+    """Split '%name = <result shape> opcode(operands...), attrs' robustly.
+
+    Tuple result shapes may contain '/*index=N*/' comments (with '=') and
+    nested parens, so this walks the text instead of using a single regex.
+    Returns (name, result_text, opcode, operand_text) or None.
+    """
+    m = _INSTR_HEAD_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        result_text = rest[:end + 1]
+        after = rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        result_text = rest[:sp]
+        after = rest[sp:]
+    m2 = _OPCODE_RE.match(after)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    body = after[m2.end():]
+    depth, buf = 1, []
+    for ch in body:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    return name, result_text, opcode, "".join(buf)
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy", "copy-start", "copy-done", "after-all",
+    "partition-id", "replica-id", "iota", "custom-call",
+    # Control-flow wrappers: their bodies are traversed separately, and
+    # their operand tuples alias in place — counting them would charge the
+    # whole loop carry per step.
+    "while", "conditional", "call", "optimization-barrier",
+}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """Sum of (elements, bytes) over every shape token in ``text``."""
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        count = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    count *= int(d)
+        elems += count
+        nbytes += count * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = m.group(2)
+    if dims == "":
+        return []
+    return [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_text: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    by_name: Dict[str, Instruction]
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, Computation] = {}
+        self._parse(hlo_text)
+        self._multipliers = self._compute_multipliers()
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        current: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            head = _COMP_HEAD_RE.match(line)
+            if head and line.endswith("{"):
+                current = Computation(head.group(1), [], {})
+                self.computations[current.name] = current
+                if "ENTRY" in line:
+                    self.entry = current.name
+                continue
+            if current is None:
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            parts = _split_instr(line)
+            if parts is None:
+                continue
+            name, result_text, opcode, operand_text = parts
+            operands = _OPERAND_RE.findall(operand_text)
+            instr = Instruction(name, opcode, result_text, line, operands)
+            current.instructions.append(instr)
+            current.by_name[name] = instr
+
+    # ------------------------------------------------------------------
+    def _operand_shape_text(self, comp: Computation, op_name: str) -> str:
+        instr = comp.by_name.get(op_name)
+        if instr is not None:
+            return instr.result_text
+        for c in self.computations.values():
+            if op_name in c.by_name:
+                return c.by_name[op_name].result_text
+        return ""
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for instr in comp.instructions:
+            for m in _CONST_RE.finditer(instr.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _compute_multipliers(self) -> Dict[str, float]:
+        mult: Dict[str, float] = defaultdict(float)
+        mult[self.entry] = 1.0
+        # Propagate through while bodies and conditional branches only;
+        # fusion internals and reduce/sort appliers do not touch memory.
+        frontier = [self.entry]
+        seen_edges = set()
+        while frontier:
+            cname = frontier.pop()
+            cmult = mult[cname]
+            comp = self.computations[cname]
+            for instr in comp.instructions:
+                if instr.opcode == "while":
+                    body = re.search(r"body=%?([\w.\-]+)", instr.line)
+                    cond = re.search(r"condition=%?([\w.\-]+)", instr.line)
+                    if body:
+                        trips = self._trip_count(cond.group(1)) if cond \
+                            else 1
+                        key = (cname, instr.name, body.group(1))
+                        if key in seen_edges:
+                            continue
+                        seen_edges.add(key)
+                        mult[body.group(1)] += cmult * trips
+                        frontier.append(body.group(1))
+                elif instr.opcode == "conditional":
+                    branches = re.findall(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations=\{)([^,}]+)", instr.line)
+                    names = re.findall(r"%([\w.\-]+)", ",".join(branches))
+                    for b in names:
+                        key = (cname, instr.name, b)
+                        if key in seen_edges:
+                            continue
+                        seen_edges.add(key)
+                        mult[b] += cmult
+                        frontier.append(b)
+        return dict(mult)
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: Computation, instr: Instruction) -> float:
+        out_dims = _first_shape_dims(instr.result_text) or []
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+        contract = 1
+        if m and instr.operands:
+            lhs_text = self._operand_shape_text(comp, instr.operands[0])
+            lhs_dims = _first_shape_dims(lhs_text) or []
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+        return 2.0 * out_elems * contract
+
+    def _instr_bytes(self, comp: Computation, instr: Instruction) -> float:
+        """Bytes an instruction moves, modelling in-place slice updates.
+
+        dynamic-update-slice aliases its operand: true traffic is the
+        update region (read+write), not the whole buffer; likewise
+        dynamic-slice/gather read only the slice they produce.
+        """
+        op = instr.opcode
+        _, rb = _shape_elems_bytes(instr.result_text)
+        if op == "fusion":
+            # XLA aliases in-place update fusions: only the update region
+            # moves.  Slice-producing fusions read just the slice.
+            if "dynamic-update-slice" in instr.name:
+                upd = 0
+                for o in instr.operands[1:]:
+                    _, b = _shape_elems_bytes(
+                        self._operand_shape_text(comp, o))
+                    upd += b
+                return 2.0 * min(upd, rb) if upd else 2.0 * rb
+            if "slice" in instr.name or "gather" in instr.name:
+                return 2.0 * rb
+        if op == "dynamic-slice":
+            return 2.0 * rb
+        if op == "dynamic-update-slice":
+            upd = 0
+            if len(instr.operands) >= 2:
+                _, upd = _shape_elems_bytes(
+                    self._operand_shape_text(comp, instr.operands[1]))
+            return 2.0 * upd
+        if op == "gather":
+            return 2.0 * rb
+        if op == "scatter":
+            upd = 0
+            if len(instr.operands) >= 3:
+                _, upd = _shape_elems_bytes(
+                    self._operand_shape_text(comp, instr.operands[2]))
+            return 2.0 * upd + rb
+        ob = 0
+        for o in instr.operands:
+            _, b = _shape_elems_bytes(self._operand_shape_text(comp, o))
+            ob += b
+        return rb + ob
+
+    def summarize(self) -> Dict[str, float]:
+        flops = 0.0
+        bytes_accessed = 0.0
+        coll_bytes: Dict[str, float] = defaultdict(float)
+        coll_counts: Dict[str, float] = defaultdict(float)
+        for cname, comp in self.computations.items():
+            mult = self._multipliers.get(cname)
+            if not mult:
+                continue
+            for instr in comp.instructions:
+                op = instr.opcode
+                base = op[:-6] if op.endswith("-start") else op
+                if op in ("dot", "dot_general") or op.startswith("dot"):
+                    flops += mult * self._dot_flops(comp, instr)
+                if op.endswith("-done"):
+                    continue
+                if base in _COLLECTIVES:
+                    nbytes = 0
+                    for o in instr.operands:
+                        _, b = _shape_elems_bytes(
+                            self._operand_shape_text(comp, o))
+                        nbytes += b
+                    coll_bytes[base] += mult * nbytes
+                    coll_counts[base] += mult
+                if op in _SKIP_BYTES_OPS or base in _COLLECTIVES:
+                    continue
+                bytes_accessed += mult * self._instr_bytes(comp, instr)
+        coll_bytes["total"] = sum(coll_bytes.values())
+        return {
+            "flops": flops,
+            "bytes_accessed": bytes_accessed,
+            "collective_bytes": dict(coll_bytes),
+            "collective_counts": dict(coll_counts),
+        }
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    return HloCostModel(hlo_text).summarize()
+
+
+def top_contributors(hlo_text: str, kind: str = "collective",
+                     k: int = 12) -> List[Tuple[float, str]]:
+    """Largest individual cost contributors, for perf diagnosis.
+
+    kind: "collective" (bytes), "bytes", or "flops".
+    Returns [(total_contribution, description), ...] descending.
+    """
+    model = HloCostModel(hlo_text)
+    rows: List[Tuple[float, str]] = []
+    for cname, comp in model.computations.items():
+        mult = model._multipliers.get(cname)
+        if not mult:
+            continue
+        for instr in comp.instructions:
+            op = instr.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            if kind == "collective":
+                if base not in _COLLECTIVES or op.endswith("-done"):
+                    continue
+                nbytes = sum(
+                    _shape_elems_bytes(
+                        model._operand_shape_text(comp, o))[1]
+                    for o in instr.operands)
+                rows.append((mult * nbytes,
+                             f"{base} x{mult:.0f} {instr.result_text[:60]}"
+                             f" @{cname[:40]}"))
+            elif kind == "flops" and op.startswith("dot"):
+                rows.append((mult * model._dot_flops(comp, instr),
+                             f"dot x{mult:.0f} {instr.line[:90]}"))
+            elif kind == "bytes":
+                if op in _SKIP_BYTES_OPS or base in _COLLECTIVES:
+                    continue
+                rows.append((mult * model._instr_bytes(comp, instr),
+                             f"{op} x{mult:.0f} {instr.name[:40]} "
+                             f"{instr.result_text[:50]}"))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]

@@ -1,0 +1,124 @@
+"""Roofline model plumbing (paper Section II-C) plus the three-term
+distributed extension used for the TPU dry-run analysis.
+
+The classic single-device roofline is ``P = min(beta * AI, pi)``.  For a
+pod-scale deployment we report the three time terms per training/serving step:
+
+  compute    = FLOPs / (chips * peak_flops)
+  memory     = bytes / (chips * hbm_bandwidth)
+  collective = collective_bytes / (chips * link_bandwidth)
+
+The dominant term is the bottleneck; the step can never run faster than
+max(compute, memory, collective) under perfect overlap, nor slower than their
+sum under zero overlap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.hardware import HardwareSpec
+from repro.core.sparsity_models import TrafficBreakdown
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflinePoint:
+    """One kernel/workload placed on a device roofline."""
+
+    name: str
+    ai: float                       # FLOPs / byte
+    flops: float                    # total useful FLOPs
+    hardware: HardwareSpec
+    attained_flops_per_s: Optional[float] = None   # measured, if available
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.ai >= self.hardware.ridge_point else "memory"
+
+    @property
+    def attainable_flops_per_s(self) -> float:
+        return self.hardware.attainable(self.ai)
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Measured / attainable; None when nothing was measured."""
+        if self.attained_flops_per_s is None:
+            return None
+        return self.attained_flops_per_s / self.attainable_flops_per_s
+
+
+def place(name: str, traffic: TrafficBreakdown, hw: HardwareSpec,
+          attained: Optional[float] = None) -> RooflinePoint:
+    """Place a sparsity-model traffic estimate on a hardware roofline."""
+    return RooflinePoint(name=name, ai=traffic.ai, flops=traffic.flops,
+                         hardware=hw, attained_flops_per_s=attained)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedRoofline:
+    """Three-term roofline for one (arch x shape x mesh) dry-run cell."""
+
+    name: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    hardware: HardwareSpec
+    model_flops: float = 0.0        # 6*N*D (+attention) useful FLOPs
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * self.hardware.peak_flops)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * self.hardware.hbm_bandwidth)
+
+    @property
+    def collective_s(self) -> float:
+        if self.hardware.link_bandwidth <= 0:
+            return 0.0
+        return self.collective_bytes / (self.chips * self.hardware.link_bandwidth)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        """Perfect-overlap bound: the slowest of the three pipes."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_compute_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat / redundancy waste."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """Model-FLOPs utilization ceiling implied by the dominant term."""
+        denom = self.step_time_lower_bound_s * self.chips * self.hardware.peak_flops
+        if denom <= 0:
+            return 0.0
+        return self.model_flops / denom
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_compute_ratio": self.useful_compute_ratio,
+            "mfu_upper_bound": self.mfu_upper_bound,
+            "step_time_lower_bound_s": self.step_time_lower_bound_s,
+        }

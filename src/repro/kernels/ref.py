@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each oracle reconstructs the mathematically obvious computation (densify +
+matmul, or one-hot einsum) with no shared code paths with the kernels, so a
+kernel bug cannot hide in a shared helper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bcsr_ref(blocks, block_rows, block_cols, b, *, n: int, t: int):
+    """Densify the block structure on host, then one dense matmul."""
+    blocks = np.asarray(blocks)
+    block_rows = np.asarray(block_rows)
+    block_cols = np.asarray(block_cols)
+    dense = np.zeros((n, n), dtype=np.float64)
+    for blk, br, bc in zip(blocks, block_rows, block_cols):
+        dense[br * t:(br + 1) * t, bc * t:(bc + 1) * t] += blk
+    return jnp.asarray(dense @ np.asarray(b, dtype=np.float64)).astype(
+        b.dtype)
+
+
+def banded_ref(band, b, *, t: int, w: int):
+    """Densify the band, then one dense matmul."""
+    band = np.asarray(band)
+    nb = band.shape[0]
+    n = nb * t
+    dense = np.zeros((n, n), dtype=np.float64)
+    for i in range(nb):
+        for o in range(2 * w + 1):
+            j = i + o - w
+            if 0 <= j < nb:
+                dense[i * t:(i + 1) * t, j * t:(j + 1) * t] += band[i, o]
+    return jnp.asarray(dense @ np.asarray(b, dtype=np.float64)).astype(
+        b.dtype)
+
+
+def grouped_matmul_ref(x, w, group_ids, *, bm: int):
+    """One-hot contraction: out = einsum(x, onehot(expert_of_row), w)."""
+    x_np = np.asarray(x, dtype=np.float64)
+    w_np = np.asarray(w, dtype=np.float64)
+    E = w_np.shape[0]
+    row_groups = np.repeat(np.asarray(group_ids), bm)     # [T]
+    onehot = (row_groups[:, None] == np.arange(E)[None, :]).astype(
+        np.float64)                                       # [T, E]
+    out = np.einsum("tk,te,ekn->tn", x_np, onehot, w_np)
+    return jnp.asarray(out).astype(x.dtype)

@@ -1,0 +1,221 @@
+"""Sharding policy: parameter PartitionSpecs, activation rules, batch specs.
+
+Scheme (DESIGN.md Section 4):
+  * weights: Megatron TP over "model" (column-parallel into the layer,
+    row-parallel out of it) + FSDP over "data" on the other dim; replicated
+    across "pod" (hybrid ZeRO: cross-pod traffic is gradients only, which is
+    where the int8 compression applies).
+  * activations: batch over ("pod","data"); attention heads over "model"
+    when the head count divides TP, else sequence/context-parallel fallback;
+    FFN hidden and vocab logits over "model".
+  * decode KV caches: batch over whatever data axes divide it, *sequence*
+    over "model" (+ leftover data axes) — uniform across every arch
+    regardless of head counts, which is what makes the long_500k cells
+    shardable (a 512k-token cache is split into per-chip 1-2k slices).
+
+Everything is expressed as PartitionSpec trees; NamedShardings are built at
+jit boundaries by the launch layer.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------------
+# Parameter rules: path regex -> spec builder(data_axis).
+# Stacked layer leaves get a leading group dim (None) prepended.
+# ---------------------------------------------------------------------------
+
+_COL = ("wqkv", "wq", "wk", "wv", "wi_fused", "wi_gate", "wi_up", "wi",
+        "in_proj", "wx", "wy", "dt_proj", "lm_head", "mm_proj")
+_ROW = ("wo", "out", "out_proj", "x_proj")
+
+_PARAM_RULES = [
+    (re.compile(r"embed/table$"), lambda d: P("model", None)),
+    (re.compile(r"(%s)/kernel$" % "|".join(_COL)), lambda d: P(d, "model")),
+    (re.compile(r"(%s)/kernel$" % "|".join(_ROW)), lambda d: P("model", d)),
+    (re.compile(r"(%s)/bias$" % "|".join(_COL)), lambda d: P("model")),
+    (re.compile(r"(%s)/bias$" % "|".join(_ROW)), lambda d: P()),
+    (re.compile(r"router/kernel$"), lambda d: P()),
+    (re.compile(r"conv_w$"), lambda d: P(None, "model")),
+    (re.compile(r"conv_b$"), lambda d: P("model")),
+    (re.compile(r"A_log$"), lambda d: P("model", None)),
+    (re.compile(r"(D|lam)$"), lambda d: P("model")),
+    (re.compile(r"w_[ri]$"), lambda d: P("model", None, None)),
+    (re.compile(r"w_gate$"), lambda d: P("model", d, None)),
+    (re.compile(r"w_up$"), lambda d: P("model", d, None)),
+    (re.compile(r"w_down$"), lambda d: P("model", None, d)),
+]
+
+
+def validate_spec(spec: P, shape, mesh) -> P:
+    """Drop sharding on any dim the mesh axes do not evenly divide.
+
+    Keeps the policy total (e.g. whisper's odd 51865 vocab falls back to a
+    replicated vocab dim instead of failing the lower).
+    """
+    out = []
+    for i, axes in enumerate(tuple(spec)):
+        if axes is None or i >= len(shape):
+            out.append(None if i >= len(shape) else axes)
+            continue
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        factor = 1
+        for a in axes_t:
+            factor *= mesh.shape[a]
+        out.append(axes if shape[i] % factor == 0 else None)
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def _param_spec(path: str, shape, stacked: bool, mesh) -> P:
+    ndim = len(shape)
+    for rx, builder in _PARAM_RULES:
+        if rx.search(path):
+            spec = builder("data")
+            if stacked:
+                spec = P(*((None,) + tuple(spec)))
+            if len(spec) < ndim:
+                spec = P(*(tuple(spec) + (None,) * (ndim - len(spec))))
+            return validate_spec(spec, shape, mesh)
+    return P(*((None,) * ndim))
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, mesh) -> Dict:
+    """PartitionSpec tree matching a params pytree (shapes or arrays)."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    treedef = jax.tree_util.tree_structure(params_shape)
+    specs = []
+    for path, leaf in flat:
+        spath = "/".join(
+            p.key if hasattr(p, "key") else str(p) for p in path)
+        stacked = spath.startswith("layers/") or "/layers/" in spath
+        specs.append(_param_spec(spath, leaf.shape, stacked, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation rules.
+# ---------------------------------------------------------------------------
+
+def dp_axes_for_batch(mesh, batch: int) -> Tuple[Tuple[str, ...],
+                                                 Tuple[str, ...]]:
+    """Greedy: batch takes ("pod","data") axes whose product divides it;
+    the leftover axes are free for sequence sharding."""
+    taken, leftover = [], []
+    prod = 1
+    for ax in ("pod", "data"):
+        if ax not in mesh.axis_names:
+            continue
+        size = mesh.shape[ax]
+        if batch % (prod * size) == 0:
+            taken.append(ax)
+            prod *= size
+        else:
+            leftover.append(ax)
+    return tuple(taken), tuple(leftover)
+
+
+def _maybe(axes: Tuple[str, ...]):
+    return axes if axes else None
+
+
+def activation_rules(cfg: ModelConfig, mesh, shape: ShapeConfig) -> Dict:
+    """Rules dict for ShardingCtx, keyed by semantic activation kind."""
+    tp = mesh.shape["model"]
+    if shape.kind == "decode":
+        dp, rest = dp_axes_for_batch(mesh, shape.global_batch)
+        seq_axes = tuple(rest) + ("model",)
+        return {
+            "tokens_bse": P(_maybe(dp), None, None),
+            "kv_cache": P(_maybe(dp), seq_axes, None, None),
+        }
+    dp, _ = dp_axes_for_batch(mesh, shape.global_batch)
+    dp = _maybe(dp)
+    heads_ok = cfg.num_heads and cfg.num_heads % tp == 0
+    kv_ok = cfg.num_kv_heads and cfg.num_kv_heads % tp == 0
+    rules = {
+        # Megatron sequence parallelism: the residual stream between layers
+        # is sequence-sharded over "model" (all-gathered at layer entry,
+        # reduce-scattered at exit) so saved remat carries scale 1/TP.
+        # validate() in ShardingCtx drops it when seq doesn't divide.
+        "tokens_bse": P(dp, "model", None),
+        "ffn_bsf": P(dp, None, "model"),
+        "logits_bsv": P(dp, None, "model"),
+        "ssm_bsdn": P(dp, None, "model"),
+        "moe_gecd": P(dp, "model", None, None),
+    }
+    if heads_ok:
+        rules["heads_bshd"] = P(dp, None, "model", None)
+    else:
+        # context-parallel fallback: shard query sequence instead of heads
+        rules["heads_bshd"] = P(dp, "model", None, None)
+    if kv_ok:
+        rules["kv_bskd"] = P(dp, None, "model", None)
+    return rules
+
+
+def batch_pspecs(cfg: ModelConfig, mesh, shape: ShapeConfig) -> Dict:
+    dp, _ = dp_axes_for_batch(mesh, shape.global_batch)
+    dp = _maybe(dp)
+    specs = {"tokens": P(dp, None)}
+    if shape.kind == "train":
+        specs["labels"] = P(dp, None)
+    if cfg.family == "encdec":
+        specs["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        specs["mm_embeds"] = P(dp, None, None)
+        specs["positions_3d"] = P(None, dp, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                 cache_shape) -> Dict:
+    """Specs for the decode cache pytree (leaves carry a leading group dim).
+
+    KV leaves [G,B,S,H,D]: batch over dividing data axes, seq over the rest
+    + "model".  Recurrent states [G,B,...]: batch over data axes, feature
+    over "model".
+    """
+    dp, rest = dp_axes_for_batch(mesh, shape.global_batch)
+    dp = _maybe(dp)
+    seq_axes = tuple(rest) + ("model",)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "cross_k", "cross_v"):
+            return P(None, dp, seq_axes, None, None)
+        if name == "conv":            # [G,B,K-1,C]
+            return P(None, dp, None, "model")
+        if name == "h":               # [G,B,rw] or [G,B,d_in,N]
+            if leaf.ndim == 4:
+                return P(None, dp, "model", None)
+            return P(None, dp, "model")
+        return P(*((None,) * leaf.ndim))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_shape)[0]
+    treedef = jax.tree_util.tree_structure(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [validate_spec(spec_for(p, l), l.shape, mesh)
+                  for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# NamedSharding helpers.
+# ---------------------------------------------------------------------------
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def opt_state_pspecs(param_specs: Dict) -> Dict:
+    """AdamW state: mu/nu inherit the param spec; count replicated."""
+    return {"mu": param_specs, "nu": param_specs, "count": P()}

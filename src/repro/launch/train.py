@@ -1,0 +1,73 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 200 --reduced --ckpt-dir /tmp/ckpt
+
+``--reduced`` runs the smoke-scale config on the host; the full config +
+production mesh path is exercised via launch.dryrun (this container has one
+CPU device).  On a real TPU slice the same command with --mesh data,model
+spawns the pjit'd trainer.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeConfig, get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--mesh", default="",
+                    help="e.g. '4,2' => (data=4, model=2) over host devices")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = SHAPES[args.shape]
+    if args.seq_len or args.batch:
+        shape = ShapeConfig("custom", args.seq_len or shape.seq_len,
+                            args.batch or shape.global_batch, "train")
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split(","))
+        mesh = make_host_mesh(d, m)
+
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every,
+                         grad_accum=args.grad_accum,
+                         schedule_kwargs={"warmup_steps": args.warmup,
+                                          "total_steps": args.steps})
+    trainer = Trainer(cfg, shape, tcfg, mesh=mesh,
+                      opt_cfg=adamw.AdamWConfig(lr=args.lr),
+                      data_cfg=DataConfig(seed=0))
+    start = trainer.init_or_restore()
+    print(f"devices={jax.device_count()} params="
+          f"{cfg.param_count() / 1e6:.1f}M start_step={start}")
+    metrics = trainer.run(args.steps)
+    print("final metrics:", metrics)
+    if trainer.straggler_events:
+        print(f"stragglers observed: {len(trainer.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: 10 assigned architectures over shared functional blocks."""
+from repro.models.model import (
+    decode_step, forward, init_cache, init_params, prime_cross_cache,
+)
+from repro.models.sharding_ctx import NO_SHARDING, ShardingCtx
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params",
+           "prime_cross_cache", "NO_SHARDING", "ShardingCtx"]

@@ -1,0 +1,271 @@
+"""Attention: chunked (flash-style) prefill/train paths + decode paths.
+
+Three structural regimes, matching the paper's taxonomy as applied to
+attention maps (DESIGN.md Section 6):
+
+  global causal   -> dense lower-triangular map (random/scale-free regime
+                     when sparsified; dense roofline here)
+  local (window)  -> banded map: the paper's diagonal-sparsity regime; the
+                     kv working set per query block is a fixed band, realized
+                     by dynamic-slice gathers instead of full-seq scans
+  bidirectional   -> encoder / cross attention (dense rectangular)
+
+All softmax statistics are fp32; activations bf16.  The chunked paths scan
+over blocks so HLO size is O(1) in sequence length and peak memory is
+O(block * seq_kv_block) — required for the 32k prefill cells.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+#: Causal-attention implementation: "masked" scans every (q, kv) block pair
+#: and masks the upper triangle (2x FLOP waste, simple); "triangle" scans
+#: only the lower-triangular pairs (exact FLOPs).  Module-level so launch
+#: scripts can flip it per experiment (EXPERIMENTS.md Section Perf).
+CAUSAL_IMPL = "masked"
+
+
+def set_causal_impl(impl: str) -> None:
+    global CAUSAL_IMPL
+    assert impl in ("masked", "triangle"), impl
+    CAUSAL_IMPL = impl
+
+
+def _pick_block(s: int, pref: int) -> int:
+    """Largest block size <= pref that divides s (shapes are static)."""
+    b = min(pref, s)
+    while s % b:
+        b -= 1
+    return b
+
+
+def _gqa_expand(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """[B,S,Hq,D] -> [B,S,Hkv,G,D] grouping query heads per kv head."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+def _attn_block(q, k, v, mask) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                        jnp.ndarray]:
+    """One (q-block, kv-block) tile: returns (unnormalized out, m, l).
+
+    q: [B, bq, Hkv, G, D]; k/v: [B, bk, Hkv, D]; mask: [bq, bk] or None.
+    Tiles stay in the compute dtype (bf16) with fp32 accumulation — the
+    fp32-tile variant doubled the attention-interior HBM traffic
+    (EXPERIMENTS.md Section Perf, hypothesis P1).
+    """
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32)
+    # m is the max over *unmasked* logits — an upper bound on the masked
+    # max, equally valid for stability, and it lets mask+exp+cast fuse into
+    # a single elementwise pass over the logits (one bf16 tensor written
+    # instead of two fp32 ones; EXPERIMENTS.md Section Perf, P6).
+    m = jnp.max(logits, axis=-1)                          # [B,H,G,bq]
+    p = jnp.exp(logits - m[..., None])
+    if mask is not None:
+        p = jnp.where(mask[None, None, None], p, 0.0)
+    p = p.astype(v.dtype)
+    l = jnp.sum(p, axis=-1, dtype=jnp.float32)            # [B,H,G,bq]
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out, m, l
+
+
+def _merge(acc, m_acc, l_acc, out, m, l):
+    """Online-softmax merge of a new tile into the accumulators."""
+    m_new = jnp.maximum(m_acc, m)
+    scale_old = jnp.exp(m_acc - m_new)
+    scale_new = jnp.exp(m - m_new)
+    acc = acc * scale_old[..., None] + out * scale_new[..., None]
+    l_new = l_acc * scale_old + l * scale_new
+    return acc, m_new, l_new
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, q_block: int = 512,
+                      kv_block: int = 1024) -> jnp.ndarray:
+    """Global (or bidirectional) chunked attention.
+
+    q: [B,Sq,Hq,D]; k/v: [B,Skv,Hkv,D].  Causal masking assumes q and k
+    positions align at the end (standard LM layout, Sq == Skv for training).
+
+    Baseline note (EXPERIMENTS.md Section Perf): the causal path scans every
+    (q, kv) block pair and masks the upper triangle, so HLO FLOPs are ~2x the
+    useful attention FLOPs.  The banded/local path below has no such waste.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    bq = _pick_block(sq, q_block)
+    if causal and CAUSAL_IMPL == "triangle" and sq == skv:
+        kv_block = bq          # triangle walks square block pairs
+    bk = _pick_block(skv, kv_block)
+    nq, nk = sq // bq, skv // bk
+
+    qe = _gqa_expand(q, hkv) * (1.0 / math.sqrt(d))
+    qe = jnp.moveaxis(qe.reshape(b, nq, bq, hkv, hq // hkv, d), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nk, bk, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, bk, hkv, d), 1, 0)
+
+    if causal and CAUSAL_IMPL == "triangle" and bq == bk and nq == nk:
+        out = _triangle_causal(qe, kb, vb, b, hq, hkv, d, nq, bq)
+        return jnp.moveaxis(out, 0, 1).reshape(b, sq, hq, d)
+
+    q_pos = jnp.arange(bq)
+    k_pos = jnp.arange(bk)
+
+    def q_step(_, qi_and_i):
+        qi, i = qi_and_i
+
+        def kv_step(carry, kv_and_j):
+            acc, m_acc, l_acc = carry
+            (kj, vj), j = kv_and_j
+            mask = None
+            if causal:
+                abs_q = i * bq + q_pos[:, None]
+                abs_k = j * bk + k_pos[None, :]
+                mask = abs_q >= abs_k
+            out, m, l = _attn_block(qi, kj, vj, mask)
+            return _merge(acc, m_acc, l_acc, out, m, l), None
+
+        g = hq // hkv
+        init = (jnp.zeros((b, hkv, g, bq, d), jnp.float32),
+                jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, bq), jnp.float32))
+        (acc, _, l_acc), _ = jax.lax.scan(
+            kv_step, init, ((kb, vb), jnp.arange(nk)))
+        out = acc / jnp.maximum(l_acc[..., None], 1e-30)
+        # [B,Hkv,G,bq,D] -> [B,bq,Hq,D]
+        out = jnp.moveaxis(out, 3, 1).reshape(b, bq, hq, d)
+        return None, out.astype(q.dtype)
+
+    # Flash-attention memory semantics: the per-q-block step is
+    # rematerialized in backward, so no per-(q,kv)-block probabilities are
+    # ever saved — O(seq) residuals instead of O(seq^2).
+    _, blocks = jax.lax.scan(jax.checkpoint(q_step), None,
+                             (qe, jnp.arange(nq)))
+    return jnp.moveaxis(blocks, 0, 1).reshape(b, sq, hq, d)
+
+
+def _triangle_causal(qe, kb, vb, b, hq, hkv, d, nq, bq):
+    """Exact-FLOP causal flash: scan only lower-triangular block pairs.
+
+    qe: [nq, B, bq, Hkv, G, D]; kb/vb: [nq, B, bq, Hkv, D].
+    The (i, j<=i) pairs are enumerated row-major so all updates to output
+    block i are consecutive; accumulators live in the scan carry and are
+    updated with dynamic slices.  FLOPs = nq(nq+1)/2 block tiles — no
+    masked-out upper-triangle compute (EXPERIMENTS.md Section Perf, P3).
+    """
+    g = hq // hkv
+    pairs_i, pairs_j = [], []
+    for i in range(nq):
+        for j in range(i + 1):
+            pairs_i.append(i)
+            pairs_j.append(j)
+    idx_i = jnp.asarray(pairs_i, jnp.int32)
+    idx_j = jnp.asarray(pairs_j, jnp.int32)
+    tri = jnp.arange(bq)[:, None] >= jnp.arange(bq)[None, :]
+
+    def step(carry, ij):
+        acc, m_acc, l_acc = carry
+        i, j = ij
+        qi = jax.lax.dynamic_index_in_dim(qe, i, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        # Only the diagonal block needs the triangular mask.
+        mask = jnp.where(i == j, tri, jnp.ones_like(tri))
+        out, m, l = _attn_block(qi, kj, vj, mask)
+        a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_i = jax.lax.dynamic_index_in_dim(m_acc, i, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l_acc, i, 0, keepdims=False)
+        a_n, m_n, l_n = _merge(a_i, m_i, l_i, out, m, l)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_n, i, 0)
+        m_acc = jax.lax.dynamic_update_index_in_dim(m_acc, m_n, i, 0)
+        l_acc = jax.lax.dynamic_update_index_in_dim(l_acc, l_n, i, 0)
+        return (acc, m_acc, l_acc), None
+
+    init = (jnp.zeros((nq, b, hkv, g, bq, d), jnp.float32),
+            jnp.full((nq, b, hkv, g, bq), NEG_INF, jnp.float32),
+            jnp.zeros((nq, b, hkv, g, bq), jnp.float32))
+    (acc, _, l_acc), _ = jax.lax.scan(jax.checkpoint(step), init,
+                                      (idx_i, idx_j))
+    out = acc / jnp.maximum(l_acc[..., None], 1e-30)
+    # [nq,B,Hkv,G,bq,D] -> [nq,B,bq,Hq,D]
+    out = jnp.moveaxis(out, 4, 2)
+    return out.reshape(nq, b, bq, hq, d).astype(qe.dtype)
+
+
+def local_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    window: int, q_block: int = 512) -> jnp.ndarray:
+    """Sliding-window causal attention (the paper's banded regime).
+
+    Each q block attends to a fixed band [i*bq - window + 1, i*bq + bq), so
+    the kv working set is gathered with one dynamic slice per block: traffic
+    and FLOPs scale with window, not seq — exactly the diagonal-sparsity
+    argument of Eq. 3.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    bq = _pick_block(s, q_block)
+    nq = s // bq
+    band = bq + window  # kv slice length per q block (rounded band)
+
+    # Pad kv on the left so every slice is in-bounds.
+    pad = band - bq
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    qe = _gqa_expand(q, hkv) * (1.0 / math.sqrt(d))
+    qe = jnp.moveaxis(qe.reshape(b, nq, bq, hkv, hq // hkv, d), 1, 0)
+
+    q_pos = jnp.arange(bq)
+    k_pos = jnp.arange(band)
+
+    def q_step(_, qi_and_i):
+        qi, i = qi_and_i
+        start = i * bq  # left edge of the band in padded coords
+        kj = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        # Absolute positions: q at start+pad-…; do it in band-relative terms:
+        # kv slot t corresponds to absolute position start + t - pad.
+        abs_q = q_pos[:, None] + pad          # within-band coords of queries
+        abs_k = k_pos[None, :]
+        mask = (abs_q >= abs_k) & (abs_q - abs_k < window)
+        # Mask out padded (absolute < 0) kv slots.
+        valid = (start + k_pos - pad) >= 0
+        mask = mask & valid[None, :]
+        out, m, l = _attn_block(qi, kj, vj, mask)
+        out = out / jnp.maximum(l[..., None], 1e-30)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, bq, hq, d)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(jax.checkpoint(q_step), None,
+                             (qe, jnp.arange(nq)))
+    return jnp.moveaxis(blocks, 0, 1).reshape(b, s, hq, d)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray,
+                     slot_mask: jnp.ndarray) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: [B,1,Hq,D]; caches: [B,S,Hkv,D]; slot_mask: [B,S] bool (valid slots).
+    Works for both linear caches (prefix valid) and ring buffers (arbitrary
+    valid set — softmax is permutation-invariant).
+    """
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    qe = _gqa_expand(q, hkv)[:, 0] * (1.0 / math.sqrt(d))   # [B,Hkv,G,D]
+    logits = jnp.einsum("bhgd,bshd->bhgs", qe.astype(jnp.float32),
+                        k_cache.astype(jnp.float32))
+    logits = jnp.where(slot_mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,223 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, initializers.
+
+Everything is functional: params are nested dicts of jnp arrays, created by
+``init_*`` functions and consumed by pure ``apply``-style functions.  Compute
+runs in bf16 (TPU-native) with fp32 master params and fp32 normalization /
+softmax internals.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def he_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in or shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * std
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_core(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return ((1.0 + scale) * normed).astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    out = ((1.0 + scale) * (xf * inv)).astype(x.dtype)
+    return out, (x, scale, inv)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    """Closed-form backward keeping the residual-stream cotangent in the
+    compute dtype (bf16): only the per-token reductions run in fp32, so
+    cross-shard collectives of dx move half the bytes (EXPERIMENTS.md
+    Section Perf, hypothesis P2)."""
+    x, scale, inv = res
+    d = x.shape[-1]
+    dyf = dy.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    g = (1.0 + scale)
+    # dx = g*inv*dy - x * inv^3/d * sum(g*dy*x)
+    s = jnp.sum(dyf * g * xf, axis=-1, keepdims=True)     # fp32 reduction
+    dx = g * inv * dyf - xf * (inv ** 3) * (s / d)
+    dscale = jnp.sum(dyf * xf * inv,
+                     axis=tuple(range(x.ndim - 1)))
+    return dx.astype(dy.dtype), dscale.astype(jnp.float32)
+
+
+_rmsnorm_core.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(params: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with the (1 + scale) parameterization (gemma/llama style).
+
+    custom_vjp: fp32 statistics, compute-dtype streams in both directions.
+    """
+    return _rmsnorm_core(x, params["scale"], eps)
+
+
+def init_layernorm(d: int) -> Dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: Dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (params["scale"] * normed + params["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP.
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False) -> Dict:
+    p = {"kernel": he_init(key, (d_in, d_out))}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+def init_mlp(key, d: int, d_ff: int, variant: str,
+             fused: bool = False) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if variant in ("swiglu", "geglu"):
+        if fused:
+            return {"wi_fused": init_dense(k1, d, 2 * d_ff),
+                    "wo": init_dense(k3, d_ff, d)}
+        return {"wi_gate": init_dense(k1, d, d_ff),
+                "wi_up": init_dense(k2, d, d_ff),
+                "wo": init_dense(k3, d_ff, d)}
+    return {"wi": init_dense(k1, d, d_ff), "wo": init_dense(k2, d_ff, d)}
+
+
+def mlp(params: Dict, x: jnp.ndarray, variant: str, ctx=None) -> jnp.ndarray:
+    if variant in ("swiglu", "geglu"):
+        act = jax.nn.silu if variant == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        if "wi_fused" in params:
+            both = dense(params["wi_fused"], x)
+            gate, up = jnp.split(both, 2, axis=-1)
+        else:
+            gate = dense(params["wi_gate"], x)
+            up = dense(params["wi_up"], x)
+        h = act(gate) * up
+        if ctx is not None:
+            h = ctx.constrain(h, "ffn_bsf")
+        return dense(params["wo"], h)
+    h = jax.nn.gelu(dense(params["wi"], x), approximate=True)
+    if ctx is not None:
+        h = ctx.constrain(h, "ffn_bsf")
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + qwen2-vl M-RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)                # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+MROPE_SECTION_FRACTIONS = (0.25, 0.375, 0.375)   # temporal, height, width
+
+
+def apply_mrope(x: jnp.ndarray, positions_3d: jnp.ndarray,
+                theta: float) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, D]; positions_3d: [3, B, S] (temporal, height, width ids).
+    The D/2 frequency slots are partitioned into three sections, each rotated
+    by its own position stream.
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)                 # [half]
+    sec_t = int(half * MROPE_SECTION_FRACTIONS[0])
+    sec_h = int(half * MROPE_SECTION_FRACTIONS[1])
+    bounds = (sec_t, sec_t + sec_h)
+    slot = jnp.arange(half)
+    which = (slot >= bounds[0]).astype(jnp.int32) + \
+        (slot >= bounds[1]).astype(jnp.int32)                    # [half] 0/1/2
+    pos = positions_3d.astype(jnp.float32)                       # [3, B, S]
+    # Select per-slot position stream: [B, S, half]
+    pos_sel = jnp.take(pos, which, axis=0)                       # [half,B,S]->?
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)                       # [B, S, half]
+    angles = pos_sel * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal position table [seq, d]."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding.
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int) -> Dict:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(params: Dict, tokens: jnp.ndarray, scale: bool = False,
+          dtype=COMPUTE_DTYPE) -> jnp.ndarray:
+    x = params["table"].astype(dtype)[tokens]
+    if scale:
+        x = x * jnp.asarray(math.sqrt(params["table"].shape[1]), dtype)
+    return x
+
+
+def unembed(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits via the (tied or separate) output table: [.., d] -> [.., V]."""
+    return x @ params["table"].astype(x.dtype).T

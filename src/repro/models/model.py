@@ -1,0 +1,518 @@
+"""Model assembly: init / forward / decode for all 10 architectures.
+
+Layer stacks are ``jax.lax.scan``s over *pattern groups* (one group = one
+repetition of ``cfg.layer_pattern``), with per-group parameters stacked on a
+leading axis.  HLO size and compile time are therefore O(period), not
+O(num_layers) — required to compile qwen2-72b (80L) and qwen3-moe (94L) on
+this container.
+
+Families:
+  dense / vlm      decoder-only transformer (global or local/global pattern)
+  moe              dense attention + MoE FFN (repro.models.moe)
+  ssm              mamba-1 stack (repro.models.ssm)
+  hybrid           RG-LRU + local attention (repro.models.rglru)
+  encdec           whisper: encoder stack + decoder w/ cross-attention;
+                   the audio conv frontend is a stub (precomputed frames)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.sharding_ctx import NO_SHARDING
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+#: Fuse QKV (and MLP gate/up) projections into single matmuls.  Same math,
+#: one backward dx all-reduce instead of three/two per layer — the measured
+#: per-layer activation-gradient collectives dominate the TP collective term
+#: (EXPERIMENTS.md Section Perf, hypothesis P4).  Module-level switch so the
+#: baseline (unfused) configuration stays reproducible.
+FUSE_PROJECTIONS = False
+
+
+def set_fused_projections(flag: bool) -> None:
+    global FUSE_PROJECTIONS
+    FUSE_PROJECTIONS = flag
+
+
+def _norm_fn(cfg):
+    if cfg.family == "encdec":
+        return L.init_layernorm, functools.partial(L.layernorm)
+    return L.init_rmsnorm, functools.partial(L.rmsnorm, eps=cfg.norm_eps)
+
+
+def _scale_embed(cfg) -> bool:
+    # Gemma-family models scale embeddings by sqrt(d_model); within the
+    # assigned pool that is exactly the geglu archs.
+    return cfg.mlp_variant == "geglu"
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init.
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if FUSE_PROJECTIONS:
+        fused = (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+        return {
+            "wqkv": L.init_dense(k1, d, fused, bias=cfg.qkv_bias),
+            "wo": L.init_dense(k4, cfg.num_heads * cfg.head_dim, d),
+        }
+    return {
+        "wq": L.init_dense(k1, d, cfg.num_heads * cfg.head_dim,
+                           bias=cfg.qkv_bias),
+        "wk": L.init_dense(k2, d, cfg.num_kv_heads * cfg.head_dim,
+                           bias=cfg.qkv_bias),
+        "wv": L.init_dense(k3, d, cfg.num_kv_heads * cfg.head_dim,
+                           bias=cfg.qkv_bias),
+        "wo": L.init_dense(k4, cfg.num_heads * cfg.head_dim, d),
+    }
+
+
+def _init_layer(key, cfg, kind: str) -> Dict:
+    init_norm, _ = _norm_fn(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ln": init_norm(d),
+                "mamba": S.init_mamba(keys[0], d, cfg.ssm_state,
+                                      cfg.ssm_conv, cfg.ssm_expand)}
+    if kind == "rglru":
+        return {"ln1": init_norm(d),
+                "rglru": R.init_rglru(keys[0], d, cfg.rnn_width or d,
+                                      cfg.ssm_conv),
+                "ln2": init_norm(d),
+                "mlp": L.init_mlp(keys[1], d, cfg.d_ff, cfg.mlp_variant,
+                                  fused=FUSE_PROJECTIONS)}
+    layer = {"ln1": init_norm(d), "attn": _init_attn(keys[0], cfg),
+             "ln2": init_norm(d)}
+    if cfg.num_experts:
+        layer["moe"] = MOE.init_moe(keys[1], d, cfg.moe_d_ff,
+                                    cfg.num_experts)
+    else:
+        layer["mlp"] = L.init_mlp(keys[1], d, cfg.d_ff, cfg.mlp_variant,
+                                  fused=FUSE_PROJECTIONS)
+    if cfg.family == "encdec":
+        layer["ln_cross"] = init_norm(d)
+        layer["cross"] = _init_attn(keys[2], cfg)
+    return layer
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    """Full parameter pytree; repeated groups stacked on a leading axis."""
+    period = cfg.layer_pattern
+    groups = cfg.num_layers // len(period)
+    k_embed, k_layers, k_head, k_enc, k_mm = jax.random.split(key, 5)
+
+    layers = {}
+    for i, kind in enumerate(period):
+        keys = jax.random.split(jax.random.fold_in(k_layers, i), groups)
+        layers[f"p{i}"] = jax.vmap(
+            lambda kk: _init_layer(kk, cfg, kind))(keys)
+
+    init_norm, _ = _norm_fn(cfg)
+    params = {
+        "embed": L.init_embedding(k_embed, cfg.padded_vocab, cfg.d_model),
+        "layers": layers,
+        "final_norm": init_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(k_head, cfg.d_model,
+                                         cfg.padded_vocab)
+    if cfg.family == "encdec":
+        keys = jax.random.split(k_enc, cfg.encoder_layers)
+        enc_cfg_kind = "global"
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda kk: {
+                    "ln1": init_norm(cfg.d_model),
+                    "attn": _init_attn(jax.random.fold_in(kk, 0), cfg),
+                    "ln2": init_norm(cfg.d_model),
+                    "mlp": L.init_mlp(jax.random.fold_in(kk, 1),
+                                      cfg.d_model, cfg.d_ff,
+                                      cfg.mlp_variant),
+                })(keys),
+            "norm": init_norm(cfg.d_model),
+        }
+        del enc_cfg_kind
+    if cfg.family == "vlm":
+        params["mm_proj"] = L.init_dense(k_mm, cfg.d_model, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention application (train/prefill and decode).
+# ---------------------------------------------------------------------------
+
+def _qkv(p, cfg, x, positions, ctx, rope: bool = True):
+    b, s, _ = x.shape
+    if "wqkv" in p:
+        nq = cfg.num_heads * cfg.head_dim
+        nkv = cfg.num_kv_heads * cfg.head_dim
+        fused = L.dense(p["wqkv"], x)
+        q = fused[..., :nq].reshape(b, s, cfg.num_heads, cfg.head_dim)
+        k = fused[..., nq:nq + nkv].reshape(b, s, cfg.num_kv_heads,
+                                            cfg.head_dim)
+        v = fused[..., nq + nkv:].reshape(b, s, cfg.num_kv_heads,
+                                          cfg.head_dim)
+    else:
+        q = L.dense(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+        k = L.dense(p["wk"], x).reshape(b, s, cfg.num_kv_heads,
+                                        cfg.head_dim)
+        v = L.dense(p["wv"], x).reshape(b, s, cfg.num_kv_heads,
+                                        cfg.head_dim)
+    if rope and cfg.family != "encdec":
+        if cfg.mrope and positions.ndim == 3:
+            q = L.apply_mrope(q, positions, cfg.rope_theta)
+            k = L.apply_mrope(k, positions, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.constrain(q, "heads_bshd")
+    k = ctx.constrain(k, "kv_bskd")
+    v = ctx.constrain(v, "kv_bskd")
+    return q, k, v
+
+
+def _attn_train(p, cfg, x, positions, kind, ctx):
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions, ctx)
+    if kind == "local" and s > cfg.window_size:
+        out = A.local_attention(q, k, v, window=cfg.window_size)
+    else:
+        out = A.chunked_attention(q, k, v, causal=True)
+    out = ctx.constrain(out, "heads_bshd")
+    return L.dense(p["wo"], out.reshape(b, s, -1))
+
+
+def _cross_train(p, cfg, x, enc_out, ctx):
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    se = enc_out.shape[1]
+    k = L.dense(p["wk"], enc_out).reshape(b, se, cfg.num_kv_heads,
+                                          cfg.head_dim)
+    v = L.dense(p["wv"], enc_out).reshape(b, se, cfg.num_kv_heads,
+                                          cfg.head_dim)
+    out = A.chunked_attention(q, k, v, causal=False)
+    return L.dense(p["wo"], out.reshape(b, s, -1))
+
+
+def _attn_decode(p, cfg, x, cache, pos, positions, kind, ctx):
+    """x: [B,1,d]; cache: {"k","v"} [B,S_c,Hkv,D]; pos: scalar int32."""
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(p, cfg, x, positions, ctx)
+    s_c = cache["k"].shape[1]
+    if kind == "local":
+        slot = jnp.mod(pos, s_c)
+        window_full = pos >= s_c
+        slots = jnp.arange(s_c)
+        mask = jnp.where(window_full, True, slots <= pos)[None, :]
+        mask = jnp.broadcast_to(mask, (b, s_c))
+    else:
+        slot = jnp.minimum(pos, s_c - 1)
+        slots = jnp.arange(s_c)
+        mask = jnp.broadcast_to((slots <= pos)[None, :], (b, s_c))
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    k_cache = ctx.constrain(k_cache, "kv_cache")
+    v_cache = ctx.constrain(v_cache, "kv_cache")
+    out = A.decode_attention(q, k_cache, v_cache, mask)
+    out = L.dense(p["wo"], out.reshape(b, 1, -1))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Layer application.
+# ---------------------------------------------------------------------------
+
+def _apply_ffn(layer, cfg, x, ctx):
+    _, norm = _norm_fn(cfg)
+    h = norm(layer["ln2"], x)
+    if cfg.num_experts:
+        return x + MOE.moe_ffn(layer["moe"], h, k=cfg.num_experts_per_token,
+                               num_experts=cfg.num_experts,
+                               capacity_factor=cfg.moe_capacity_factor,
+                               ctx=ctx)
+    return x + L.mlp(layer["mlp"], h, cfg.mlp_variant, ctx=ctx)
+
+
+def _apply_layer_train(layer, cfg, kind, x, positions, ctx, enc_out=None):
+    _, norm = _norm_fn(cfg)
+    if kind == "ssm":
+        return x + S.mamba_forward(layer["mamba"], norm(layer["ln"], x),
+                                   ctx=ctx)
+    if kind == "rglru":
+        x = x + R.rglru_forward(layer["rglru"], norm(layer["ln1"], x),
+                                ctx=ctx)
+        return x + L.mlp(layer["mlp"], norm(layer["ln2"], x),
+                         cfg.mlp_variant, ctx=ctx)
+    x = x + _attn_train(layer["attn"], cfg, norm(layer["ln1"], x),
+                        positions, kind, ctx)
+    if cfg.family == "encdec":
+        x = x + _cross_train(layer["cross"], cfg,
+                             norm(layer["ln_cross"], x), enc_out, ctx)
+    return _apply_ffn(layer, cfg, x, ctx)
+
+
+def _apply_layer_decode(layer, cfg, kind, x, cache, pos, positions, ctx,
+                        enc_out=None):
+    _, norm = _norm_fn(cfg)
+    if kind == "ssm":
+        out, new_cache = S.mamba_decode(layer["mamba"],
+                                        cache, norm(layer["ln"], x))
+        return x + out, new_cache
+    if kind == "rglru":
+        out, new_rnn = R.rglru_decode(layer["rglru"], cache["rnn"],
+                                      norm(layer["ln1"], x))
+        x = x + out
+        x = x + L.mlp(layer["mlp"], norm(layer["ln2"], x), cfg.mlp_variant)
+        return x, {"rnn": new_rnn}
+    out, new_kv = _attn_decode(layer["attn"], cfg, norm(layer["ln1"], x),
+                               cache["kv"], pos, positions, kind, ctx)
+    x = x + out
+    new_cache = {"kv": new_kv}
+    if cfg.family == "encdec":
+        q = L.dense(layer["cross"]["wq"],
+                    norm(layer["ln_cross"], x)).reshape(
+            x.shape[0], 1, cfg.num_heads, cfg.head_dim)
+        sc = cache["cross_k"].shape[1]
+        mask = jnp.ones((x.shape[0], sc), bool)
+        cr = A.decode_attention(q, cache["cross_k"], cache["cross_v"], mask)
+        x = x + L.dense(layer["cross"]["wo"],
+                        cr.reshape(x.shape[0], 1, -1))
+        new_cache["cross_k"] = cache["cross_k"]
+        new_cache["cross_v"] = cache["cross_v"]
+    x = _apply_ffn(layer, cfg, x, ctx)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper) and embedding front.
+# ---------------------------------------------------------------------------
+
+def _run_encoder(cfg, params, frames, ctx, remat: bool = True):
+    """frames: [B, S_enc, d] precomputed stub embeddings."""
+    _, norm = _norm_fn(cfg)
+    x = frames.astype(COMPUTE_DTYPE)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(
+        x.dtype)
+
+    def body(h, lp):
+        b, s, _ = h.shape
+        a = norm(lp["ln1"], h)
+        q = L.dense(lp["attn"]["wq"], a).reshape(b, s, cfg.num_heads,
+                                                 cfg.head_dim)
+        k = L.dense(lp["attn"]["wk"], a).reshape(b, s, cfg.num_kv_heads,
+                                                 cfg.head_dim)
+        v = L.dense(lp["attn"]["wv"], a).reshape(b, s, cfg.num_kv_heads,
+                                                 cfg.head_dim)
+        o = A.chunked_attention(q, k, v, causal=False)
+        h = h + L.dense(lp["attn"]["wo"], o.reshape(b, s, -1))
+        h = h + L.mlp(lp["mlp"], norm(lp["ln2"], h), cfg.mlp_variant,
+                      ctx=ctx)
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body) if remat else body, x,
+                        params["encoder"]["layers"])
+    return norm(params["encoder"]["norm"], x)
+
+
+def _embed_tokens(cfg, params, batch, ctx, add_encdec_pos: bool = True):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, scale=_scale_embed(cfg),
+                dtype=COMPUTE_DTYPE)
+    if cfg.family == "vlm" and "mm_embeds" in batch:
+        mm = L.dense(params["mm_proj"], batch["mm_embeds"].astype(x.dtype))
+        n_mm = mm.shape[1]
+        x = jnp.concatenate([mm, x[:, n_mm:]], axis=1)
+    if cfg.family == "encdec" and add_encdec_pos:
+        pos_table = L.sinusoidal_positions(tokens.shape[1], cfg.d_model)
+        x = x + pos_table[None].astype(x.dtype)
+    return ctx.constrain(x, "tokens_bse")
+
+
+def _positions_for(cfg, batch):
+    tokens = batch["tokens"]
+    if cfg.mrope and "positions_3d" in batch:
+        return batch["positions_3d"]
+    b, s = tokens.shape[0], tokens.shape[1]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+# ---------------------------------------------------------------------------
+# Public API: forward (train/prefill), init_cache, decode_step.
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, *,
+            ctx=NO_SHARDING, remat: bool = True,
+            return_pre_logits: bool = False) -> jnp.ndarray:
+    """Returns logits [B, S, V] (fp32), or the final-norm hidden states
+    [B, S, E] when ``return_pre_logits`` (chunked-loss path)."""
+    x = _embed_tokens(cfg, params, batch, ctx)
+    positions = _positions_for(cfg, batch)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["frames"], ctx, remat)
+
+    period = cfg.layer_pattern
+
+    def one_layer(kind):
+        def apply(h, lp, pos):
+            h = _apply_layer_train(lp, cfg, kind, h, pos, ctx, enc_out)
+            return ctx.constrain(h, "tokens_bse")
+        return apply
+
+    def group_body(h, gparams):
+        # Per-LAYER remat (not per-group): backward rematerializes one
+        # layer at a time, so peak residency is O(1) in the pattern
+        # period — recurrentgemma's 19-layer period held 19 layers of
+        # intermediates live under group-level remat (EXPERIMENTS.md
+        # Section Perf, P8).  Saved carries are the SP-sharded residual
+        # stream only.
+        for i, kind in enumerate(period):
+            fn = one_layer(kind)
+            if remat:
+                fn = jax.checkpoint(fn)
+            h = fn(h, gparams[f"p{i}"], positions)
+        return h, None
+
+    x, _ = jax.lax.scan(group_body, x, params["layers"])
+    _, norm = _norm_fn(cfg)
+    x = norm(params["final_norm"], x)
+    if return_pre_logits:
+        return x
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["lm_head"], x)
+    logits = ctx.constrain(logits, "logits_bsv")
+    return logits.astype(jnp.float32)
+
+
+def unembed_table(cfg: ModelConfig, params: Dict) -> jnp.ndarray:
+    """[V_padded, E] output-projection table (tied or separate)."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"]
+    return params["lm_head"]["kernel"].T
+
+
+def _layer_cache(cfg, kind, batch: int, cache_len: int):
+    if kind == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in),
+                                  COMPUTE_DTYPE),
+                "h": jnp.zeros((batch, d_in, cfg.ssm_state), jnp.float32)}
+    if kind == "rglru":
+        rw = cfg.rnn_width or cfg.d_model
+        return {"rnn": {
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, rw), COMPUTE_DTYPE),
+            "h": jnp.zeros((batch, rw), jnp.float32)}}
+    s = min(cache_len, cfg.window_size) if kind == "local" else cache_len
+    kv = {"k": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim),
+                         COMPUTE_DTYPE),
+          "v": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim),
+                         COMPUTE_DTYPE)}
+    cache = {"kv": kv}
+    if cfg.family == "encdec":
+        cache["cross_k"] = jnp.zeros(
+            (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim),
+            COMPUTE_DTYPE)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    """Decode cache pytree mirroring params["layers"] group stacking."""
+    period = cfg.layer_pattern
+    groups = cfg.num_layers // len(period)
+    cache = {}
+    for i, kind in enumerate(period):
+        one = _layer_cache(cfg, kind, batch, cache_len)
+        cache[f"p{i}"] = jax.tree.map(
+            lambda a: jnp.zeros((groups,) + a.shape, a.dtype), one)
+    return cache
+
+
+def prime_cross_cache(cfg: ModelConfig, params: Dict, cache: Dict,
+                      enc_out: jnp.ndarray) -> Dict:
+    """Fill the (constant) cross-attention K/V of an enc-dec decode cache."""
+    b, se, _ = enc_out.shape
+
+    def per_group(gparams):
+        lp = gparams["p0"]["cross"]
+        k = L.dense(lp["wk"], enc_out).reshape(b, se, cfg.num_kv_heads,
+                                               cfg.head_dim)
+        v = L.dense(lp["wv"], enc_out).reshape(b, se, cfg.num_kv_heads,
+                                               cfg.head_dim)
+        return k.astype(COMPUTE_DTYPE), v.astype(COMPUTE_DTYPE)
+
+    ks, vs = jax.vmap(per_group)(params["layers"])
+    new = dict(cache)
+    p0 = dict(cache["p0"])
+    p0["cross_k"], p0["cross_v"] = ks, vs
+    new["p0"] = p0
+    return new
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jnp.ndarray, pos: jnp.ndarray, *,
+                ctx=NO_SHARDING,
+                batch_extras: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.
+
+    tokens: [B] int32 current tokens; pos: scalar int32 write position
+    (uniform across the batch — continuous batching with per-sequence
+    positions is an orthogonal serving feature).
+    Returns (logits [B, V], new cache).
+    """
+    b = tokens.shape[0]
+    batch = {"tokens": tokens[:, None]}
+    if batch_extras:
+        batch.update(batch_extras)
+    x = _embed_tokens(cfg, params, batch, ctx, add_encdec_pos=False)
+    if cfg.family == "encdec":
+        # Gather the sinusoidal position row for the current step.
+        table = L.sinusoidal_positions(65536, cfg.d_model)
+        x = x + jax.lax.dynamic_index_in_dim(
+            table, pos, keepdims=True)[None].astype(x.dtype)
+    if cfg.mrope and batch_extras and "positions_3d" in batch_extras:
+        positions = batch_extras["positions_3d"]
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(
+            jnp.int32)
+
+    period = cfg.layer_pattern
+
+    def group_body(h, xs):
+        gparams, gcache = xs
+        new_gcache = {}
+        for i, kind in enumerate(period):
+            h, new_gcache[f"p{i}"] = _apply_layer_decode(
+                gparams[f"p{i}"], cfg, kind, h, gcache[f"p{i}"], pos,
+                positions, ctx)
+            h = ctx.constrain(h, "tokens_bse")
+        return h, new_gcache
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["layers"], cache))
+    _, norm = _norm_fn(cfg)
+    x = norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["lm_head"], x)
+    return logits[:, 0].astype(jnp.float32), new_cache

@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma).
+
+Gated linear recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t).  The state is a single vector
+per channel (no state-dim expansion like mamba), so the full-sequence
+associative scan fits in activation memory directly.
+
+Gates use the Griffin block-diagonal parameterization (NUM_GATE_BLOCKS
+diagonal blocks) — this is itself the paper's blocked-sparsity regime
+applied to a weight matrix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.ssm import _causal_conv, _ssm_combine
+
+NUM_GATE_BLOCKS = 16
+_C = 8.0
+
+
+def init_rglru(key, d: int, rw: int, conv: int = 4) -> Dict:
+    keys = jax.random.split(key, 6)
+    nb = NUM_GATE_BLOCKS
+    bs = rw // nb
+    return {
+        "wx": L.init_dense(keys[0], d, rw),
+        "wy": L.init_dense(keys[1], d, rw),      # gelu branch
+        "conv_w": L.he_init(keys[2], (conv, rw), fan_in=conv),
+        "conv_b": jnp.zeros((rw,), jnp.float32),
+        "w_r": L.he_init(keys[3], (nb, bs, bs), fan_in=bs),
+        "w_i": L.he_init(keys[4], (nb, bs, bs), fan_in=bs),
+        "lam": jnp.linspace(0.5, 4.0, rw).astype(jnp.float32),
+        "out": L.init_dense(keys[5], rw, d),
+    }
+
+
+def _block_diag(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., rw] @ block-diagonal w: [nb, bs, bs] -> [..., rw]."""
+    nb, bs, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], nb, bs)
+    out = jnp.einsum("...nb,nbc->...nc", xb, w.astype(x.dtype))
+    return out.reshape(*x.shape)
+
+
+def _gates(params: Dict, xb: jnp.ndarray):
+    r = jax.nn.sigmoid(_block_diag(params["w_r"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(params["w_i"], xb).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i \
+        * xb.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_forward(params: Dict, x: jnp.ndarray, ctx=None,
+                  chunk: int = 512) -> jnp.ndarray:
+    """x: [B,S,d] -> [B,S,d].
+
+    Chunked associative scan: the fp32 gate tensors (a, sqrt(1-a^2)*i*x)
+    materialize per ``chunk`` timesteps only, with a sequential carry
+    between chunks — a full-sequence scan held 4 fp32 [B,S,rw] tensors
+    live and blew the remat budget on the 4k train cells (59.6 GiB/chip;
+    EXPERIMENTS.md Section Perf, P8).  Same math: the first element of
+    each chunk folds the carry in, exactly like the mamba chunk scan.
+    """
+    B, S, d = x.shape
+    branch = jax.nn.gelu(L.dense(params["wy"], x), approximate=True)
+    xb = L.dense(params["wx"], x)
+    xb = _causal_conv(xb, params["conv_w"], params["conv_b"])
+    if ctx is not None:
+        xb = ctx.constrain(xb, "ssm_bsdn")
+    rw = xb.shape[-1]
+    ch = min(chunk, S)
+    if S % ch:
+        ch = S  # fall back to one chunk for odd lengths (smoke tests)
+    xb_chunks = jnp.moveaxis(xb.reshape(B, S // ch, ch, rw), 1, 0)
+
+    def chunk_step(h, xb_c):
+        a, gated = _gates(params, xb_c)
+        gated = gated.at[:, 0].add(a[:, 0] * h)
+        _, hs = jax.lax.associative_scan(_ssm_combine, (a, gated), axis=1)
+        return hs[:, -1], hs.astype(x.dtype)
+
+    h0 = jnp.zeros((B, rw), jnp.float32)
+    _, h_chunks = jax.lax.scan(chunk_step, h0, xb_chunks)
+    h = jnp.moveaxis(h_chunks, 0, 1).reshape(B, S, rw)
+    return L.dense(params["out"], h * branch)
+
+
+def init_rglru_cache(params: Dict, batch: int) -> Dict:
+    conv, rw = params["conv_w"].shape
+    return {
+        "conv": jnp.zeros((batch, conv - 1, rw), jnp.bfloat16),
+        "h": jnp.zeros((batch, rw), jnp.float32),
+    }
+
+
+def rglru_decode(params: Dict, cache: Dict,
+                 x: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """x: [B,1,d] -> ([B,1,d], cache')."""
+    branch = jax.nn.gelu(L.dense(params["wy"], x), approximate=True)
+    xb_raw = L.dense(params["wx"], x)                      # [B,1,rw]
+    xb = _causal_conv(xb_raw, params["conv_w"], params["conv_b"],
+                      state=cache["conv"])
+    new_conv = jnp.concatenate(
+        [cache["conv"][:, 1:], xb_raw.astype(cache["conv"].dtype)], axis=1)
+    a, gated = _gates(params, xb[:, 0])
+    h = a * cache["h"] + gated
+    out = L.dense(params["out"], h[:, None, :].astype(x.dtype) * branch)
+    return out, {"conv": new_conv, "h": h}

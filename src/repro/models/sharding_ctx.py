@@ -1,0 +1,59 @@
+"""Activation-sharding context threaded through the model zoo.
+
+Models never import mesh/axis names; they call ``ctx.constrain(x, kind)``
+with a semantic activation kind and the launch layer decides the actual
+PartitionSpec (launch/sharding.py).  The default context is a no-op so smoke
+tests and single-device runs need no mesh.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+
+
+class ShardingCtx:
+    """Maps semantic activation kinds to sharding constraints."""
+
+    #: Semantic kinds used by the model zoo.
+    KINDS = (
+        "tokens_bse",    # residual stream [batch, seq, d_model]
+        "heads_bshd",    # attention activations [batch, seq, heads, hd]
+        "kv_bskd",       # key/value activations [batch, seq, kv_heads, hd]
+        "kv_cache",      # decode KV cache [batch, kv_heads, seq, hd]
+        "logits_bsv",    # LM head output [batch, seq, vocab]
+        "ffn_bsf",       # MLP hidden [batch, seq, d_ff]
+        "moe_gecd",      # dispatched expert buffer [groups, experts, cap, d]
+        "moe_gecf",      # expert FFN hidden [groups, experts, cap, ff]
+        "ssm_bsdn",      # SSM inner state activations [batch, seq, d_in(, N)]
+    )
+
+    def __init__(self, rules: Optional[Dict[str, object]] = None,
+                 mesh: Optional[object] = None):
+        self.rules = rules or {}
+        self.mesh = mesh
+
+    def constrain(self, x: jax.Array, kind: str) -> jax.Array:
+        spec = self.rules.get(kind)
+        if spec is None or self.mesh is None:
+            return x
+        if x.ndim != len(spec):
+            return x  # rank mismatch (e.g. flattened variant): skip
+        # Drop sharding on dims the mesh does not evenly divide (total
+        # policy; mirrors launch.sharding.validate_spec).
+        fixed = []
+        for i, axes in enumerate(tuple(spec)):
+            if axes is None:
+                fixed.append(None)
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            factor = 1
+            for a in axes_t:
+                factor *= self.mesh.shape[a]
+            fixed.append(axes if x.shape[i] % factor == 0 else None)
+        spec = jax.sharding.PartitionSpec(*fixed)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+
+NO_SHARDING = ShardingCtx()

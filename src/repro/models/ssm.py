@@ -1,0 +1,136 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+The recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t is the extreme of
+the paper's diagonal-sparsity regime: the "matrix" coupling timesteps is
+bidiagonal, so state traffic is constant per token (DESIGN.md Section 6).
+
+Training/prefill uses a chunked associative scan: lax.scan over chunks of
+``chunk`` timesteps with the [B, chunk, d_in, N] discretized tensors
+materialized per chunk only (the real Mamba kernel fuses this in SRAM; the
+chunking bounds HBM the same way), and a log-depth associative scan inside
+each chunk.  Decode is the O(1) recurrence update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mamba(key, d: int, state: int, conv: int, expand: int) -> Dict:
+    d_in = expand * d
+    dt_rank = max(d // 16, 1)
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": L.init_dense(keys[0], d, 2 * d_in),
+        "conv_w": L.he_init(keys[1], (conv, d_in), fan_in=conv),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": L.init_dense(keys[2], d_in, dt_rank + 2 * state),
+        "dt_proj": L.init_dense(keys[3], dt_rank, d_in, bias=True),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, state + 1, dtype=jnp.float32)[None, :], (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": L.init_dense(keys[4], d_in, d),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv1d, kernel size K (unrolled — K is 4).
+
+    u: [B,S,C]; w: [K,C]; state: [B,K-1,C] left-context or None (zeros).
+    """
+    K = w.shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[i].astype(u.dtype)
+              for i in range(K))
+    return out + b.astype(u.dtype)
+
+
+def _ssm_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def _discretize(params, u):
+    """u: [..., d_in] -> (dA, dBu, C) with state dim appended."""
+    dt_rank = params["dt_proj"]["kernel"].shape[0]
+    state = params["A_log"].shape[1]
+    xdbc = L.dense(params["x_proj"], u)
+    dt_r = xdbc[..., :dt_rank]
+    Bc = xdbc[..., dt_rank:dt_rank + state].astype(jnp.float32)
+    Cc = xdbc[..., dt_rank + state:].astype(jnp.float32)
+    dt = jax.nn.softplus(L.dense(params["dt_proj"], dt_r)
+                         .astype(jnp.float32))           # [..., d_in]
+    A = -jnp.exp(params["A_log"])                         # [d_in, N]
+    dA = jnp.exp(dt[..., None] * A)                       # [..., d_in, N]
+    dBu = (dt * u.astype(jnp.float32))[..., None] * Bc[..., None, :]
+    return dA, dBu, Cc
+
+
+def mamba_forward(params: Dict, x: jnp.ndarray, *, chunk: int = 256,
+                  ctx=None) -> jnp.ndarray:
+    """x: [B,S,d] -> [B,S,d].  S must be divisible by ``chunk``."""
+    B, S, d = x.shape
+    ch = min(chunk, S)
+    assert S % ch == 0
+    uz = L.dense(params["in_proj"], x)
+    u, z = jnp.split(uz, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+    if ctx is not None:
+        u = ctx.constrain(u, "ssm_bsdn")
+    d_in = u.shape[-1]
+    state = params["A_log"].shape[1]
+
+    u_chunks = jnp.moveaxis(u.reshape(B, S // ch, ch, d_in), 1, 0)
+
+    def chunk_step(h, u_c):
+        dA, dBu, Cc = _discretize(params, u_c)            # [B,ch,d_in,N]
+        dBu = dBu.at[:, 0].add(dA[:, 0] * h)              # fold carry in
+        _, hs = jax.lax.associative_scan(_ssm_combine, (dA, dBu), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cc)
+        return hs[:, -1], (y.astype(x.dtype), u_c)
+
+    h0 = jnp.zeros((B, d_in, state), jnp.float32)
+    _, (y_chunks, u_back) = jax.lax.scan(chunk_step, h0, u_chunks)
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, S, d_in)
+    y = y + u * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return L.dense(params["out_proj"], y)
+
+
+def init_mamba_cache(params: Dict, batch: int) -> Dict:
+    conv, d_in = params["conv_w"].shape
+    state = params["A_log"].shape[1]
+    return {
+        "conv": jnp.zeros((batch, conv - 1, d_in), jnp.bfloat16),
+        "h": jnp.zeros((batch, d_in, state), jnp.float32),
+    }
+
+
+def mamba_decode(params: Dict, cache: Dict,
+                 x: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """x: [B,1,d] -> ([B,1,d], cache')."""
+    uz = L.dense(params["in_proj"], x)
+    u, z = jnp.split(uz, 2, axis=-1)                      # [B,1,d_in]
+    conv_in = cache["conv"]
+    u_conv = _causal_conv(u, params["conv_w"], params["conv_b"],
+                          state=conv_in)
+    u_act = jax.nn.silu(u_conv)                           # [B,1,d_in]
+    new_conv = jnp.concatenate(
+        [conv_in[:, 1:], u.astype(conv_in.dtype)], axis=1)
+    dA, dBu, Cc = _discretize(params, u_act[:, 0])        # [B,d_in,N]
+    h = dA * cache["h"] + dBu
+    y = jnp.einsum("bdn,bn->bd", h, Cc)[:, None, :].astype(x.dtype)
+    y = y + u_act * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = L.dense(params["out_proj"], y)
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,19 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, warmup_steps: int = 500,
+                       total_steps: int = 100_000,
+                       min_ratio: float = 0.1) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_ratio. Returns a scale in
+    (0, 1] multiplied into the base lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    progress = (step - warmup_steps) / jnp.maximum(
+        total_steps - warmup_steps, 1)
+    progress = jnp.clip(progress, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(
+        jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, cos)

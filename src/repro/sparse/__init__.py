@@ -1,0 +1,16 @@
+"""Sparse formats + SpMM implementations (CSR / ELL / BCSR / DIA)."""
+from repro.sparse.formats import (
+    BCSRMatrix, CSRMatrix, DIAMatrix, ELLMatrix,
+    coo_to_bcsr, coo_to_csr, coo_to_dense, coo_to_dia, coo_to_ell,
+)
+from repro.sparse.spmm import (
+    IMPLEMENTATIONS, bcsr_spmm, bcsr_spmm_scan, csr_spmm, dense_spmm,
+    dia_spmm, ell_spmm,
+)
+
+__all__ = [
+    "BCSRMatrix", "CSRMatrix", "DIAMatrix", "ELLMatrix",
+    "coo_to_bcsr", "coo_to_csr", "coo_to_dense", "coo_to_dia", "coo_to_ell",
+    "IMPLEMENTATIONS", "bcsr_spmm", "bcsr_spmm_scan", "csr_spmm",
+    "dense_spmm", "dia_spmm", "ell_spmm",
+]

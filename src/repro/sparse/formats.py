@@ -1,0 +1,193 @@
+"""Sparse matrix containers as JAX pytrees (CSR / ELL / BCSR / DIA).
+
+These mirror the paper's evaluated layouts:
+
+  CSR    row-pointer format — the paper's baseline implementation.
+  ELL    padded row format — stands in for the vendor (MKL-style) kernel:
+         fully vectorizable, wasteful on skewed rows.
+  BCSR   dense t x t blocks with block-CSR indexing — the TPU adaptation of
+         the paper's CSB (Compressed Sparse Blocks): every nonzero block is
+         stored densely so the MXU can consume it directly.
+  DIA    banded/diagonal storage — realizes the paper's diagonal regime.
+
+All arrays are jnp; static shape information (n, t, nnz) lives in aux data so
+the containers jit cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _register(cls, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
+    jax.tree_util.register_dataclass(cls, list(data_fields), list(meta_fields))
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """CSR with a precomputed per-nonzero row-id vector (segment ids)."""
+
+    data: jnp.ndarray      # [nnz] values
+    indices: jnp.ndarray   # [nnz] column ids (int32)
+    indptr: jnp.ndarray    # [n+1] row pointers (int32)
+    row_ids: jnp.ndarray   # [nnz] row id per nonzero (int32)
+    n: int                 # static
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.shape[0])
+
+
+_register(CSRMatrix, ("data", "indices", "indptr", "row_ids"), ("n",))
+
+
+@dataclasses.dataclass(frozen=True)
+class ELLMatrix:
+    """Padded (ELLPACK) layout: fixed nonzeros-per-row with a validity mask."""
+
+    data: jnp.ndarray      # [n, k] values, zero-padded
+    indices: jnp.ndarray   # [n, k] column ids, padded with 0
+    n: int                 # static
+
+    @property
+    def k(self) -> int:
+        return int(self.data.shape[1])
+
+
+_register(ELLMatrix, ("data", "indices"), ("n",))
+
+
+@dataclasses.dataclass(frozen=True)
+class BCSRMatrix:
+    """Block-CSR with dense t x t blocks (TPU CSB analogue).
+
+    ``block_rows``/``block_cols`` are per-nonzero-block coordinates in block
+    space; blocks are sorted by (block_row, block_col) so a block row is a
+    contiguous slice — the Pallas kernel walks ``block_ptr`` like CSR walks
+    ``indptr``.
+    """
+
+    blocks: jnp.ndarray      # [N, t, t] dense block values
+    block_rows: jnp.ndarray  # [N] block-row id (int32)
+    block_cols: jnp.ndarray  # [N] block-col id (int32)
+    block_ptr: jnp.ndarray   # [nb+1] first block of each block row (int32)
+    n: int                   # static: matrix dimension
+    t: int                   # static: block edge
+    nnz: int                 # static: true nonzeros (for FLOP accounting)
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def nb(self) -> int:
+        return self.n // self.t
+
+
+_register(BCSRMatrix, ("blocks", "block_rows", "block_cols", "block_ptr"),
+          ("n", "t", "nnz"))
+
+
+@dataclasses.dataclass(frozen=True)
+class DIAMatrix:
+    """Diagonal storage: one row of values per stored offset."""
+
+    data: jnp.ndarray      # [num_offsets, n] values (zero where out of band)
+    offsets: Tuple[int, ...]  # static diagonal offsets
+    n: int                 # static
+
+    @property
+    def num_offsets(self) -> int:
+        return int(self.data.shape[0])
+
+
+_register(DIAMatrix, ("data",), ("offsets", "n"))
+
+
+# --------------------------------------------------------------------------
+# Converters from the numpy COO patterns (repro.core.patterns.COOMatrix).
+# --------------------------------------------------------------------------
+
+def coo_to_csr(m, dtype=jnp.float32) -> CSRMatrix:
+    order = np.lexsort((m.cols, m.rows))
+    rows = m.rows[order]
+    cols = m.cols[order]
+    vals = m.vals[order].astype(dtype)
+    counts = np.bincount(rows, minlength=m.n)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return CSRMatrix(
+        data=jnp.asarray(vals),
+        indices=jnp.asarray(cols.astype(np.int32)),
+        indptr=jnp.asarray(indptr),
+        row_ids=jnp.asarray(rows.astype(np.int32)),
+        n=m.n,
+    )
+
+
+def coo_to_ell(m, dtype=jnp.float32, max_k: int | None = None) -> ELLMatrix:
+    counts = np.bincount(m.rows, minlength=m.n)
+    k = int(counts.max()) if max_k is None else max_k
+    k = max(k, 1)
+    data = np.zeros((m.n, k), dtype=dtype)
+    indices = np.zeros((m.n, k), dtype=np.int32)
+    slot = np.zeros(m.n, dtype=np.int64)
+    order = np.lexsort((m.cols, m.rows))
+    for r, c, v in zip(m.rows[order], m.cols[order], m.vals[order]):
+        s = slot[r]
+        if s < k:
+            data[r, s] = v
+            indices[r, s] = c
+            slot[r] = s + 1
+    return ELLMatrix(data=jnp.asarray(data), indices=jnp.asarray(indices),
+                     n=m.n)
+
+
+def coo_to_bcsr(m, t: int, dtype=jnp.float32) -> BCSRMatrix:
+    if m.n % t != 0:
+        raise ValueError(f"matrix dim {m.n} not divisible by block size {t}")
+    bi = m.rows.astype(np.int64) // t
+    bj = m.cols.astype(np.int64) // t
+    nb = m.n // t
+    blin = bi * nb + bj
+    uniq, inverse = np.unique(blin, return_inverse=True)
+    N = uniq.shape[0]
+    blocks = np.zeros((N, t, t), dtype=dtype)
+    rr = m.rows % t
+    cc = m.cols % t
+    blocks[inverse, rr, cc] = m.vals.astype(dtype)
+    block_rows = (uniq // nb).astype(np.int32)
+    block_cols = (uniq % nb).astype(np.int32)
+    counts = np.bincount(block_rows, minlength=nb)
+    block_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return BCSRMatrix(
+        blocks=jnp.asarray(blocks),
+        block_rows=jnp.asarray(block_rows),
+        block_cols=jnp.asarray(block_cols),
+        block_ptr=jnp.asarray(block_ptr),
+        n=m.n, t=t, nnz=m.nnz,
+    )
+
+
+def coo_to_dia(m, dtype=jnp.float32, max_offsets: int = 64) -> DIAMatrix:
+    offs = np.unique(m.cols.astype(np.int64) - m.rows)
+    if offs.shape[0] > max_offsets:
+        raise ValueError(
+            f"{offs.shape[0]} distinct diagonals exceeds max_offsets="
+            f"{max_offsets}; DIA only suits banded matrices")
+    data = np.zeros((offs.shape[0], m.n), dtype=dtype)
+    off_index = {int(o): i for i, o in enumerate(offs)}
+    for r, c, v in zip(m.rows, m.cols, m.vals):
+        data[off_index[int(c) - int(r)], r] = v
+    return DIAMatrix(data=jnp.asarray(data),
+                     offsets=tuple(int(o) for o in offs), n=m.n)
+
+
+def coo_to_dense(m, dtype=jnp.float32) -> jnp.ndarray:
+    dense = np.zeros((m.n, m.n), dtype=dtype)
+    dense[m.rows, m.cols] = m.vals.astype(dtype)
+    return jnp.asarray(dense)

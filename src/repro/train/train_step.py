@@ -1,0 +1,206 @@
+"""Train / prefill / decode step factories (jit + shardings).
+
+``make_train_step`` builds the full pjit'd update: forward (remat'd scan),
+softmax cross-entropy over the model-sharded vocab, backward, AdamW.
+Microbatch gradient accumulation (``grad_accum``) trades collective volume
+and activation memory against step latency — a first-class knob for the
+perf iteration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import sharding as SH
+from repro.models import model as M
+from repro.models.sharding_ctx import NO_SHARDING, ShardingCtx
+from repro.optim import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 vocab: Optional[int] = None) -> jnp.ndarray:
+    """Mean next-token loss; stable, vocab may be model-sharded/padded."""
+    logits = logits.astype(jnp.float32)
+    if vocab is not None and vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_ctx(cfg, mesh, shape) -> ShardingCtx:
+    if mesh is None:
+        return NO_SHARDING
+    return ShardingCtx(SH.activation_rules(cfg, mesh, shape), mesh)
+
+
+def chunked_xent(cfg, params, hidden, labels, ctx,
+                 chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy without materializing [B,S,V] fp32 logits.
+
+    Scans sequence chunks; each chunk's unembed matmul + lse is a
+    rematerialized step, so peak logits memory is B*chunk*V instead of
+    B*S*V (EXPERIMENTS.md Section Perf, hypothesis P9).
+    """
+    B, S, E = hidden.shape
+    ch = min(chunk, S)
+    while S % ch:
+        ch -= 1
+    table = M.unembed_table(cfg, params)           # [Vp, E] fp32 master
+    h_chunks = jnp.moveaxis(hidden.reshape(B, S // ch, ch, E), 1, 0)
+    l_chunks = jnp.moveaxis(labels.reshape(B, S // ch, ch), 1, 0)
+
+    def chunk_step(acc, xs):
+        h_c, lab_c = xs
+        logits = (h_c @ table.astype(h_c.dtype).T).astype(jnp.float32)
+        logits = ctx.constrain(logits, "logits_bsv")
+        if cfg.vocab_size < logits.shape[-1]:
+            pad = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+            logits = jnp.where(pad, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab_c[..., None],
+                                   axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk_step),
+                            jnp.float32(0), (h_chunks, l_chunks))
+    return total / (B * S)
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh=None, *,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    remat: bool = True, grad_accum: int = 1,
+                    chunked_loss: bool = False,
+                    schedule_kwargs: Optional[Dict] = None):
+    """Returns (step_fn, shardings) — step_fn(params, opt_state, batch, step)
+    -> (params, opt_state, metrics)."""
+    ctx = make_ctx(cfg, mesh, shape)
+    sched = functools.partial(cosine_with_warmup, **(schedule_kwargs or {}))
+
+    def loss_fn(params, batch):
+        if chunked_loss:
+            hidden = M.forward(cfg, params, batch, ctx=ctx, remat=remat,
+                               return_pre_logits=True)
+            return chunked_xent(cfg, params, hidden, batch["labels"], ctx)
+        logits = M.forward(cfg, params, batch, ctx=ctx, remat=remat)
+        return softmax_xent(logits, batch["labels"], cfg.vocab_size)
+
+    def grads_for(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        micro_batch = jax.tree.map(
+            lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                + a.shape[1:]), batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            micro, (jnp.float32(0), zeros), micro_batch)
+        inv = 1.0 / grad_accum
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step_fn(params, opt_state, batch, step):
+        loss, grads = grads_for(params, batch)
+        lr_scale = sched(step)
+        params, opt_state, om = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg, lr_scale)
+        metrics = {"loss": loss, "lr_scale": lr_scale, **om}
+        return params, opt_state, metrics
+
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1)), None
+
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = SH.param_pspecs(cfg, params_shape, mesh)
+    opt_specs = SH.opt_state_pspecs(pspecs)
+    bspecs = SH.batch_pspecs(cfg, mesh, shape)
+    shardings = {
+        "params": SH.named(mesh, pspecs),
+        "opt": SH.named(mesh, opt_specs),
+        "batch": SH.named(mesh, bspecs),
+    }
+    metrics_spec = SH.named(
+        mesh, {"loss": P(), "lr_scale": P(), "grad_norm": P()})
+    fn = jax.jit(
+        step_fn,
+        in_shardings=(shardings["params"], shardings["opt"],
+                      shardings["batch"], SH.named(mesh, P())),
+        out_shardings=(shardings["params"], shardings["opt"], metrics_spec),
+        donate_argnums=(0, 1),
+    )
+    return fn, shardings
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """Inference prefill: forward only (no remat), logits out."""
+    ctx = make_ctx(cfg, mesh, shape)
+
+    def prefill(params, batch):
+        return M.forward(cfg, params, batch, ctx=ctx, remat=False)
+
+    if mesh is None:
+        return jax.jit(prefill), None
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = SH.param_pspecs(cfg, params_shape, mesh)
+    bspecs = SH.batch_pspecs(cfg, mesh, shape)
+    dp, _ = SH.dp_axes_for_batch(mesh, shape.global_batch)
+    out_spec = P(dp if dp else None, None, "model")
+    fn = jax.jit(prefill,
+                 in_shardings=(SH.named(mesh, pspecs),
+                               SH.named(mesh, bspecs)),
+                 out_shardings=SH.named(mesh, out_spec))
+    return fn, {"params": SH.named(mesh, pspecs),
+                "batch": SH.named(mesh, bspecs)}
+
+
+def make_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """One-token decode step against a seq_len KV cache."""
+    ctx = make_ctx(cfg, mesh, shape)
+
+    def serve(params, cache, tokens, pos):
+        extras = None
+        if cfg.mrope:
+            b = tokens.shape[0]
+            extras = {"positions_3d": jnp.broadcast_to(
+                pos, (3, b, 1)).astype(jnp.int32)}
+        return M.decode_step(cfg, params, cache, tokens, pos, ctx=ctx,
+                             batch_extras=extras)
+
+    if mesh is None:
+        return jax.jit(serve, donate_argnums=(1,)), None
+
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    pspecs = SH.param_pspecs(cfg, params_shape, mesh)
+    cspecs = SH.cache_pspecs(cfg, mesh, shape, cache_shape)
+    dp, _ = SH.dp_axes_for_batch(mesh, shape.global_batch)
+    dp = dp if dp else None
+    fn = jax.jit(
+        serve,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                      SH.named(mesh, P(dp)), SH.named(mesh, P())),
+        out_shardings=(SH.named(mesh, P(dp, "model")),
+                       SH.named(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    return fn, {"params": SH.named(mesh, pspecs),
+                "cache": SH.named(mesh, cspecs)}

@@ -1,0 +1,72 @@
+"""Checkpointer: roundtrip, atomicity, retention, elastic restore."""
+import json
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.normal(size=(4, 4)),
+                                        jnp.float32),
+                       "b": jnp.asarray(rng.normal(size=4), jnp.float32)},
+            "opt": {"count": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(3, tree)
+    out = ck.restore()
+    np.testing.assert_array_equal(out["params"]["w"],
+                                  np.asarray(tree["params"]["w"]))
+    assert int(out["opt"]["count"]) == 7
+    assert ck.latest_step() == 3
+
+
+def test_atomicity_ignores_uncommitted(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1))
+    # Simulate a crash mid-save at step 2: directory without sentinel.
+    d = ck._dir(2)
+    shutil.copytree(ck._dir(1), d)
+    os.remove(os.path.join(d, "COMMITTED"))
+    assert ck.latest_step() == 1
+    # And a stale tmp dir is invisible too.
+    shutil.copytree(ck._dir(1), ck._dir(3) + ".tmp")
+    assert ck.latest_step() == 1
+
+
+def test_retention_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.committed_steps() == [3, 4]
+
+
+def test_restore_missing_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore()
+
+
+def test_restore_validates_structure(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"params": {"w": jnp.ones(2)}})
+    with pytest.raises(ValueError):
+        ck.restore(like={"params": {"w": jnp.ones(2),
+                                    "missing": jnp.ones(2)}})
+
+
+def test_manifest_contents(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    path = ck.save(5, _tree())
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 5
+    assert manifest["arrays"]["params/w"]["shape"] == [4, 4]

@@ -1,0 +1,87 @@
+"""Multi-device integration (subprocess, 8 host devices):
+elastic checkpoint resharding + int8-compressed data parallelism."""
+import subprocess
+import sys
+
+
+def _run(script: str) -> str:
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=500,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r.stdout
+
+
+_ELASTIC = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.checkpointer import Checkpointer
+
+d = tempfile.mkdtemp()
+ck = Checkpointer(d)
+tree = {"params": {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+ck.save(1, tree)
+
+# "Elastic restart": a different topology loads the same checkpoint.
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+shardings = {"params": {"w": NamedSharding(mesh, P("data", "model"))}}
+out = ck.restore(1, shardings=shardings)
+w = out["params"]["w"]
+assert len(w.sharding.device_set) == 8
+np.testing.assert_array_equal(np.asarray(w), np.asarray(tree["params"]["w"]))
+print("ELASTIC-OK")
+"""
+
+
+_COMPRESSED_DP = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim.compression import compressed_psum
+
+mesh = jax.make_mesh((8,), ("data",))
+# Data-parallel linear regression with int8-compressed gradient exchange.
+rng = np.random.default_rng(0)
+X = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+w_true = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+y = X @ w_true
+
+def train(compress, steps=400):
+    def shard_fn(Xl, yl):
+        def body(_, carry):
+            w, residual = carry
+            pred = Xl @ w
+            g_local = 2.0 * Xl.T @ (pred - yl) / X.shape[0]
+            if compress:
+                g, new_res = compressed_psum(g_local, residual, "data")
+            else:
+                g, new_res = jax.lax.psum(g_local, "data"), residual
+            return w - 0.05 * g, new_res
+        w, _ = jax.lax.fori_loop(
+            0, steps, body, (jnp.zeros(16), jnp.zeros(16)))
+        return w
+
+    return jax.jit(jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=P(), check_vma=False))(X, y)
+
+w_exact = train(False)
+w_comp = train(True)
+err_exact = float(jnp.linalg.norm(w_exact - w_true))
+err_comp = float(jnp.linalg.norm(w_comp - w_true))
+# Error feedback keeps compressed training convergent.
+assert err_comp < 0.1, (err_comp, err_exact)
+assert abs(err_comp - err_exact) < 0.1
+print("COMPRESSED-DP-OK", round(err_exact, 4), round(err_comp, 4))
+"""
+
+
+def test_elastic_restore_new_topology():
+    assert "ELASTIC-OK" in _run(_ELASTIC)
+
+
+def test_compressed_data_parallel_converges():
+    assert "COMPRESSED-DP-OK" in _run(_COMPRESSED_DP)

@@ -1,0 +1,145 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import SHAPES, get_config, list_archs
+from repro.models import model as M
+
+
+def _batch(cfg, B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(2, cfg.vocab_size - 1, size=(B, S)).astype(np.int32))}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.normal(
+            size=(B, cfg.encoder_seq, cfg.d_model)).astype(np.float32) * .1)
+    if cfg.family == "vlm":
+        batch["mm_embeds"] = jnp.asarray(rng.normal(
+            size=(B, 8, cfg.d_model)).astype(np.float32) * 0.1)
+        batch["positions_3d"] = jnp.tile(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, 1))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 64
+    logits = models.forward(cfg, params, _batch(cfg, B, S))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not np.any(np.isnan(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_runs_and_is_finite(arch):
+    from repro.train.train_step import make_train_step
+    from repro.optim import adamw
+    cfg = get_config(arch).reduced()
+    shape = SHAPES["train_4k"]
+    step, _ = make_train_step(cfg, shape)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init_state(params, adamw.AdamWConfig())
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    batch["labels"] = batch["tokens"]
+    params, opt, metrics = step(params, opt, batch, jnp.int32(0))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "falcon-mamba-7b",
+                                  "recurrentgemma-9b", "gemma3-12b",
+                                  "olmoe-1b-7b"])
+def test_decode_matches_forward(arch):
+    """Stepping the decode cache token-by-token must reproduce the full
+    forward logits — validates KV caches, ring buffers, and recurrent
+    state updates in one shot."""
+    import dataclasses
+    # Disable MoE capacity drops: they are batch-size-dependent train-time
+    # semantics, so prefill and decode would legitimately diverge.
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              moe_capacity_factor=16.0)
+    params = models.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S, seed=3)
+    ref_logits = np.asarray(
+        models.forward(cfg, params, batch, remat=False))
+
+    cache = models.init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = models.decode_step(
+            cfg, params, cache, batch["tokens"][:, t], jnp.int32(t))
+        outs.append(np.asarray(lg))
+    got = np.stack(outs, axis=1)    # [B, S, V]
+    # bf16 compute: tiny attention-logit perturbations can flip borderline
+    # top-k routing decisions in MoE archs, so a handful of tokens may
+    # diverge legitimately — assert bulk agreement + top-1 match instead
+    # of exact allclose.
+    close = np.isclose(got, ref_logits, rtol=0.15, atol=0.15)
+    assert close.mean() > 0.97, close.mean()
+    top_ref = ref_logits.argmax(-1)
+    top_got = got.argmax(-1)
+    assert (top_ref == top_got).mean() > 0.9
+
+
+def test_local_attention_matches_global_within_window():
+    """A window >= seq makes local attention exactly global."""
+    from repro.models.attention import chunked_attention, local_attention
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 64, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 16)).astype(np.float32))
+    full = chunked_attention(q, k, v, causal=True, q_block=16, kv_block=16)
+    loc = local_attention(q, k, v, window=64, q_block=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(loc),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_local_attention_window_effect():
+    """Tokens beyond the window must not influence the output."""
+    from repro.models.attention import local_attention
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 8)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 8)).astype(np.float32))
+    out1 = local_attention(q, k, v, window=8, q_block=16)
+    # Perturb kv far outside any window of the last query block.
+    k2 = k.at[:, :8].set(99.0)
+    v2 = v.at[:, :8].set(99.0)
+    out2 = local_attention(q, k2, v2, window=8, q_block=16)
+    np.testing.assert_allclose(np.asarray(out1[:, 32:]),
+                               np.asarray(out2[:, 32:]), rtol=1e-5)
+
+
+def test_chunked_attention_matches_naive():
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 32, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 32, 4, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 32, 4, 16)).astype(np.float32))
+    got = chunked_attention(q, k, v, causal=True, q_block=8, kv_block=8)
+    # naive reference
+    logits = np.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(16)
+    mask = np.tril(np.ones((32, 32), bool))
+    logits = np.where(mask, logits, -1e30)
+    p = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    ref = np.einsum("bhqk,bkhd->bqhd", np.asarray(p), v)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_mrope_sections_disagree():
+    """M-RoPE with distinct h/w streams must differ from plain RoPE."""
+    from repro.models.layers import apply_mrope, apply_rope
+    x = jnp.ones((1, 8, 2, 16))
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    plain = apply_rope(x, pos, 10000.0)
+    same = apply_mrope(x, jnp.stack([pos, pos, pos]), 10000.0)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(same),
+                               rtol=1e-5)
+    diff = apply_mrope(x, jnp.stack([pos, pos * 3, pos * 5]), 10000.0)
+    assert not np.allclose(np.asarray(plain), np.asarray(diff))

@@ -1,0 +1,90 @@
+"""Optimizer + gradient compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw
+from repro.optim.compression import (
+    compress_grad, dequantize_int8, init_residuals, quantize_int8)
+from repro.optim.schedule import cosine_with_warmup
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    state = adamw.init_state(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    losses = []
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, m = adamw.apply_updates(params, g, state, cfg)
+        losses.append(float(loss(params)))
+    assert losses[-1] < 1e-2 * losses[0]
+    assert m["grad_norm"] > 0
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros(3)}
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    state = adamw.init_state(params, cfg)
+    huge = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+    new_params, _, m = adamw.apply_updates(params, huge, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(1e6)
+    assert np.all(np.abs(np.asarray(new_params["w"])) < 10)
+
+
+def test_state_dtype_bf16():
+    params = {"w": jnp.zeros(4)}
+    cfg = adamw.AdamWConfig(state_dtype="bfloat16")
+    state = adamw.init_state(params, cfg)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(4)}
+    _, new_state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert new_state["mu"]["w"].dtype == jnp.bfloat16
+
+
+@given(st.lists(st.floats(min_value=-100, max_value=100,
+                          allow_nan=False), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Sum of transmitted (quantized) grads tracks the sum of true grads."""
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros(32)
+    sent = np.zeros(32)
+    true = np.zeros(32)
+    for _ in range(50):
+        g = jnp.asarray(rng.normal(size=32).astype(np.float32))
+        q, scale, residual = compress_grad(g, residual)
+        sent += np.asarray(dequantize_int8(q, scale))
+        true += np.asarray(g)
+    # residual bounds the total divergence
+    np.testing.assert_allclose(sent + np.asarray(residual), true,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_schedule_shape():
+    assert float(cosine_with_warmup(0, warmup_steps=10)) == 0.0
+    assert float(cosine_with_warmup(10, warmup_steps=10)) == \
+        pytest.approx(1.0, abs=0.01)
+    end = float(cosine_with_warmup(100000, warmup_steps=10,
+                                   total_steps=100000, min_ratio=0.1))
+    assert end == pytest.approx(0.1, abs=0.01)
+
+
+def test_init_residuals_shapes():
+    grads = {"a": jnp.ones((2, 3)), "b": {"c": jnp.ones(4)}}
+    res = init_residuals(grads)
+    assert res["a"].shape == (2, 3)
+    assert res["b"]["c"].dtype == jnp.float32

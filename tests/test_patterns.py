@@ -1,0 +1,76 @@
+"""Pattern generators + structure classifier (paper Table III regimes)."""
+import numpy as np
+import pytest
+
+from repro.core import banded, blocked, classify, erdos_renyi, scale_free
+from repro.core.classify import block_stats, degree_gini, hill_alpha
+from repro.core.patterns import paper_suite
+
+
+@pytest.mark.parametrize("gen,expected", [
+    (lambda: erdos_renyi(4096, 8, seed=1), "random"),
+    (lambda: banded(4096, 1, seed=2), "diagonal"),
+    (lambda: banded(4096, 4, fill=0.9, seed=3), "diagonal"),
+    (lambda: blocked(4096, t=64, num_blocks=128, nnz_per_block=40, seed=4),
+     "blocked"),
+    (lambda: scale_free(4096, 16, alpha=2.2, seed=5), "scale_free"),
+])
+def test_classifier_recovers_regime(gen, expected):
+    m = gen()
+    report = classify(m)
+    assert report.regime == expected, report.stats
+
+
+def test_generators_deterministic():
+    a = erdos_renyi(1024, 4, seed=7)
+    b = erdos_renyi(1024, 4, seed=7)
+    np.testing.assert_array_equal(a.rows, b.rows)
+    np.testing.assert_array_equal(a.vals, b.vals)
+    c = erdos_renyi(1024, 4, seed=8)
+    assert not np.array_equal(a.rows, c.rows)
+
+
+def test_coo_invariants():
+    for gen in paper_suite(scale=10).values():
+        m = gen()
+        assert m.nnz == len(m.rows) == len(m.cols) == len(m.vals)
+        assert m.rows.min() >= 0 and m.rows.max() < m.n
+        assert m.cols.min() >= 0 and m.cols.max() < m.n
+        # sorted row-major, unique
+        lin = m.rows.astype(np.int64) * m.n + m.cols
+        assert np.all(np.diff(lin) > 0)
+        ptr = m.row_ptr()
+        assert ptr[0] == 0 and ptr[-1] == m.nnz
+
+
+def test_ideal_diagonal_is_one_per_row():
+    m = banded(2048, 1, seed=0)
+    assert m.nnz == 2048
+    np.testing.assert_array_equal(m.rows, m.cols)
+
+
+def test_block_stats_match_model():
+    """Empirical occupied columns per block ~ the paper's z formula."""
+    t, D = 64, 40.0
+    m = blocked(2 ** 14, t=t, num_blocks=400, nnz_per_block=D, seed=9)
+    stats = block_stats(m, t)
+    assert stats["D"] == pytest.approx(D, rel=0.25)
+    assert stats["z_emp"] == pytest.approx(stats["z_model"], rel=0.2)
+
+
+def test_scale_free_tail():
+    m = scale_free(2 ** 14, 16, alpha=2.2, seed=11)
+    deg = np.bincount(m.rows, minlength=m.n)
+    assert degree_gini(deg) > 0.5            # heavy tail
+    alpha = hill_alpha(deg)
+    assert 1.5 < alpha < 3.5
+    # Hubs exist: top 0.1% of rows own a disproportionate share.
+    k = max(1, m.n // 1000)
+    top = np.sort(deg)[::-1][:k].sum()
+    assert top / m.nnz > 10 * (k / m.n)
+
+
+def test_er_has_no_structure():
+    m = erdos_renyi(2 ** 12, 8, seed=13)
+    deg = np.bincount(m.rows, minlength=m.n)
+    assert degree_gini(deg) < 0.45

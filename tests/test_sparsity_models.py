@@ -1,0 +1,113 @@
+"""Property tests for the paper's sparsity-aware AI models (Section III)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PERLMUTTER_MILAN, TPU_V5E, ai_blocked, ai_blocked_tpu, ai_diagonal,
+    ai_random, ai_scale_free, arithmetic_intensity,
+    expected_occupied_columns, flops_spmm, hub_edge_fraction,
+    mxu_utilization, place,
+)
+
+dims = st.integers(min_value=2 ** 10, max_value=2 ** 22)
+degrees = st.floats(min_value=1.0, max_value=64.0)
+widths = st.sampled_from([1, 4, 16, 64])
+
+
+@given(n=dims, deg=degrees, d=widths)
+@settings(max_examples=60, deadline=None)
+def test_random_is_lower_bound(n, deg, d):
+    """Random sparsity is the paper's worst case: lowest AI of all models."""
+    nnz = int(n * deg)
+    r = ai_random(n, nnz, d).ai
+    assert r <= ai_diagonal(n, nnz, d).ai + 1e-12
+    assert r <= ai_scale_free(n, nnz, d).ai + 1e-12
+
+
+@given(n=dims, deg=degrees)
+@settings(max_examples=40, deadline=None)
+def test_ai_increases_with_d(n, deg):
+    """More dense columns amortize index traffic: AI grows with d."""
+    nnz = int(n * deg)
+    for model, kwargs in [("random", {}), ("diagonal", {}),
+                          ("scale_free", {})]:
+        ais = [arithmetic_intensity(model, n, nnz, d, **kwargs).ai
+               for d in (1, 4, 16, 64)]
+        assert all(a < b for a, b in zip(ais, ais[1:])), (model, ais)
+
+
+def test_paper_equations_exact():
+    """Eqs. 2 and 3 match the published closed forms."""
+    n, nnz, d = 2 ** 22, 10 * 2 ** 22, 16
+    eq2 = (2 * d * nnz) / ((12 + 8 * d) * nnz + 8 * n * d)
+    got = ai_random(n, nnz, d).ai
+    # row_ptr is (n+1) ints, the paper folds it into ~12 nnz bytes
+    assert got == pytest.approx(eq2, rel=0.02)
+    eq3 = (2 * d * nnz) / (12 * nnz + 16 * n * d)
+    assert ai_diagonal(n, nnz, d).ai == pytest.approx(eq3, rel=0.02)
+
+
+def test_hub_fraction_paper_example():
+    """Appendix: alpha=2.2, f=1% -> nnz_hub/nnz ~ 0.46."""
+    assert hub_edge_fraction(2.2, 0.01) == pytest.approx(0.464, abs=0.01)
+
+
+@given(alpha=st.floats(min_value=2.05, max_value=2.95),
+       f=st.floats(min_value=1e-4, max_value=1.0))
+@settings(max_examples=60, deadline=None)
+def test_hub_fraction_bounds(alpha, f):
+    h = hub_edge_fraction(alpha, f)
+    assert 0.0 < h <= 1.0
+    # More hubs can only carry more edge mass.
+    assert hub_edge_fraction(alpha, min(1.0, f * 2)) >= h - 1e-12
+
+
+@given(t=st.sampled_from([16, 64, 128, 256]),
+       D=st.floats(min_value=0.1, max_value=1e4))
+@settings(max_examples=60, deadline=None)
+def test_occupied_columns_bounds(t, D):
+    z = expected_occupied_columns(t, D)
+    assert 0.0 <= z <= t
+    # z is increasing in D and saturates at t.
+    assert expected_occupied_columns(t, D * 2) >= z - 1e-9
+
+
+def test_blocked_models():
+    n, t = 2 ** 20, 128
+    N = n // t
+    nnz = N * 64                       # D = 64 per block
+    cpu = ai_blocked(n, nnz, 16, t=t, num_blocks=N)
+    tpu = ai_blocked_tpu(n, nnz, 16, t=t, num_blocks=N)
+    assert cpu.ai > ai_random(n, nnz, 16).ai     # blocking helps
+    assert 0 < mxu_utilization(nnz, t, N) < 1
+    # TPU model moves whole dense blocks: more A traffic than CPU CSB.
+    assert tpu.bytes_a > cpu.bytes_a
+
+
+@given(d=widths, deg=degrees)
+@settings(max_examples=40, deadline=None)
+def test_traffic_consistency(d, deg):
+    n = 2 ** 16
+    nnz = int(n * deg)
+    tb = ai_random(n, nnz, d)
+    assert tb.flops == flops_spmm(nnz, d)
+    assert tb.ai == pytest.approx(tb.flops / tb.total_bytes)
+
+
+def test_roofline_placement():
+    n, nnz, d = 2 ** 22, 10 * 2 ** 22, 16
+    tb = ai_random(n, nnz, d)
+    pt = place("er_22_10", tb, PERLMUTTER_MILAN, attained=10e9)
+    assert pt.bound == "memory"          # SpMM is memory bound (paper II-C)
+    assert pt.attainable_flops_per_s == pytest.approx(
+        PERLMUTTER_MILAN.hbm_bandwidth * tb.ai)
+    assert 0 < pt.roofline_fraction < 1.5
+    # v5e ridge point: ~240 FLOP/byte, far above any SpMM AI.
+    assert TPU_V5E.ridge_point > 100
+
+
+def test_model_dispatch_unknown():
+    with pytest.raises(ValueError):
+        arithmetic_intensity("nope", 10, 10, 1)

