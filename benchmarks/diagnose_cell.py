@@ -16,10 +16,12 @@ from repro.core import hlo_flops as HF
 
 arch, shape_name = sys.argv[1], sys.argv[2]
 ga = int(sys.argv[3]) if len(sys.argv) > 3 else 0
-if ga <= 0: ga = DR.GRAD_ACCUM_DEFAULTS.get((arch, shape_name), 1)
+if ga <= 0:
+    ga = DR.GRAD_ACCUM_DEFAULTS.get((arch, shape_name), 1)
 from repro.models import attention as ATT
 ATT.set_causal_impl(os.environ.get("REPRO_CAUSAL_IMPL", "masked"))
-cfg = get_config(arch); shape = SHAPES[shape_name]
+cfg = get_config(arch)
+shape = SHAPES[shape_name]
 mesh = make_production_mesh()
 with mesh:
     params_abs, cache_abs = DR.abstract_state(cfg, shape, shape.kind)

@@ -1,8 +1,9 @@
 """Quickstart: the paper's core loop in ~40 lines.
 
-Generate one matrix per sparsity regime, classify its structure, evaluate
-the matching sparsity-aware AI model, and compare the predicted roofline
-ceiling with measured SpMM throughput.
+Generate one matrix per sparsity regime and let the structure-aware
+dispatcher do the paper's work: classify the structure, evaluate every
+candidate format's sparsity-aware roofline, pick the (format, kernel)
+pair, and run it — then compare the prediction with measured throughput.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,9 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import sparse
-from repro.core import banded, blocked, classify, erdos_renyi, scale_free
+from repro.core import banded, blocked, erdos_renyi, scale_free
 
-BETA = 8.5e9      # measure with `python -m benchmarks.run` (STREAM triad)
 N, D = 2 ** 14, 16
 
 matrices = {
@@ -27,17 +27,21 @@ matrices = {
 }
 
 b = jnp.asarray(np.random.default_rng(0).normal(size=(N, D)), jnp.float32)
-print(f"{'matrix':16s} {'regime':11s} {'AI':>6s} {'pred GF/s':>9s} "
-      f"{'meas GF/s':>9s} {'frac':>5s}")
+print(f"{'matrix':16s} {'regime':11s} {'chosen':7s} {'AI':>6s} "
+      f"{'pred GF/s':>9s} {'meas GF/s':>9s} {'frac':>5s}")
 for name, m in matrices.items():
-    report = classify(m)
-    ai = report.traffic(D, sizeof_val=4).ai
-    csr = sparse.coo_to_csr(m)
-    jax.block_until_ready(sparse.csr_spmm(csr, b))   # compile
+    plan = sparse.plan_spmm(m, D)                 # inspectable decision
+    jax.block_until_ready(sparse.spmm(m, b))      # convert + compile
     t0 = time.perf_counter()
-    jax.block_until_ready(sparse.csr_spmm(csr, b))
+    jax.block_until_ready(sparse.spmm(m, b, strategy="auto"))
     dt = time.perf_counter() - t0
     gf = 2 * m.nnz * D / dt / 1e9
-    pred = BETA * ai / 1e9
-    print(f"{name:16s} {report.regime:11s} {ai:6.3f} {pred:9.2f} "
-          f"{gf:9.2f} {gf / pred:5.2f}")
+    best = plan.candidate(plan.chosen)
+    print(f"{name:16s} {plan.regime:11s} {plan.chosen:7s} {best.ai:6.3f} "
+          f"{best.predicted_gflops:9.2f} {gf:9.2f} "
+          f"{gf / best.predicted_gflops:5.2f}")
+
+# The full audit trail for one decision: per-candidate predictions,
+# conversion amortization, and policy skip reasons.
+print()
+print(sparse.plan_spmm(matrices["powerlaw"], D).summary())

@@ -19,7 +19,6 @@ full statistics so callers can audit the decision.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 

@@ -224,6 +224,17 @@ class HloCostModel:
                         seen_edges.add(key)
                         mult[body.group(1)] += cmult * trips
                         frontier.append(body.group(1))
+                elif instr.opcode == "call":
+                    # XLA CPU wraps parallelized fusions in %call /
+                    # to_apply; the callee runs exactly once per call.
+                    target = re.search(r"to_apply=%?([\w.\-]+)", instr.line)
+                    if target:
+                        key = (cname, instr.name, target.group(1))
+                        if key in seen_edges:
+                            continue
+                        seen_edges.add(key)
+                        mult[target.group(1)] += cmult
+                        frontier.append(target.group(1))
                 elif instr.opcode == "conditional":
                     branches = re.findall(
                         r"(?:true_computation|false_computation|"

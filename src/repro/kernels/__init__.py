@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spots (SpMM variants)."""
 from repro.kernels.ops import (
     band_to_blocks, banded_spmm, bcsr_kernel_roofline, bcsr_spmm,
-    grouped_matmul, grouped_matmul_roofline, pad_empty_block_rows,
+    csr_kernel_roofline, csr_spmm, grouped_matmul, grouped_matmul_roofline,
+    pad_empty_block_rows,
 )
 __all__ = [
     "band_to_blocks", "banded_spmm", "bcsr_kernel_roofline", "bcsr_spmm",
-    "grouped_matmul", "grouped_matmul_roofline", "pad_empty_block_rows",
+    "csr_kernel_roofline", "csr_spmm", "grouped_matmul",
+    "grouped_matmul_roofline", "pad_empty_block_rows",
 ]

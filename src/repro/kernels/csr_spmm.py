@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: CSR row-gather / segment-sum SpMM.
+
+TPU realization of the paper's CSR baseline (the random-regime
+implementation): every nonzero gathers its row of B and the products are
+segment-summed by destination row.  The kernel tiles that traversal so the
+segment sum becomes an MXU matmul:
+
+  * rows are grouped into tiles of ``row_tile`` rows; each tile's nonzeros
+    are padded to whole chunks of ``chunk`` entries (sliced-ELL style
+    packing of the CSR arrays, built host-side by ``csr_to_row_tiles``);
+  * one grid step processes one chunk: it gathers ``chunk`` rows of B from
+    the VMEM-resident operand, scales by the nonzero values, and reduces
+    into the tile's C block with a one-hot [row_tile, chunk] matmul — the
+    segment-sum expressed as MXU work instead of scatter traffic;
+  * chunk -> row-tile ownership arrives via scalar prefetch (like the BCSR
+    kernel's block coordinates), so the C tile stays resident in VMEM for
+    all chunks of a tile and is written exactly once.
+
+B is held whole in VMEM (BlockSpec over the full [n, bd] slab per d-tile):
+the gather targets are data-dependent, so there is no index map that could
+stream it.  That bounds this kernel to n * bd * 4 <= VMEM — fine for the
+correctness scales exercised here; larger n would shard B's rows and
+partial-sum C, which the dispatcher notes as a skip reason instead.
+
+Padding slots carry value 0 (and column/row-slot 0), so they contribute
+nothing; every row tile owns at least one chunk, so every C block is
+visited and zeroed even for empty rows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def csr_to_row_tiles(indptr: np.ndarray, indices: np.ndarray,
+                     data: np.ndarray, *, n: int, row_tile: int = 8,
+                     chunk: int = 128) -> Tuple[np.ndarray, np.ndarray,
+                                                np.ndarray, np.ndarray]:
+    """Pack CSR arrays into fixed-size chunks grouped by row tile.
+
+    Returns ``(tile_ids[C], cols[C, chunk], row_slots[C, chunk],
+    vals[C, chunk])`` where chunk ``c`` belongs to row tile ``tile_ids[c]``
+    and ``row_slots`` are row indices *within* the tile.  Chunks of a tile
+    are contiguous; empty tiles still get one all-zero chunk.
+    """
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    data = np.asarray(data)
+    num_tiles = (n + row_tile - 1) // row_tile
+    tile_ids, cols_c, slots_c, vals_c = [], [], [], []
+    for tile in range(num_tiles):
+        r0 = tile * row_tile
+        r1 = min(r0 + row_tile, n)
+        lo, hi = int(indptr[r0]), int(indptr[r1])
+        cnt = hi - lo
+        n_chunks = max(1, -(-cnt // chunk))
+        cols = np.zeros(n_chunks * chunk, dtype=np.int32)
+        slots = np.zeros(n_chunks * chunk, dtype=np.int32)
+        vals = np.zeros(n_chunks * chunk, dtype=data.dtype)
+        cols[:cnt] = indices[lo:hi]
+        vals[:cnt] = data[lo:hi]
+        row_of_nz = np.repeat(np.arange(r0, r1),
+                              np.diff(indptr[r0:r1 + 1]).astype(np.int64))
+        slots[:cnt] = (row_of_nz - r0).astype(np.int32)
+        tile_ids.extend([tile] * n_chunks)
+        cols_c.append(cols.reshape(n_chunks, chunk))
+        slots_c.append(slots.reshape(n_chunks, chunk))
+        vals_c.append(vals.reshape(n_chunks, chunk))
+    return (np.asarray(tile_ids, dtype=np.int32),
+            np.concatenate(cols_c), np.concatenate(slots_c),
+            np.concatenate(vals_c))
+
+
+def _csr_kernel(tiles_ref, cols_ref, slots_ref, vals_ref, b_ref, o_ref, *,
+                row_tile: int):
+    """One grid step: gather-scale one chunk, one-hot-matmul into its C tile."""
+    i_c = pl.program_id(1)
+    # First chunk of this row tile in this d-pass: zero the resident C block.
+    is_first = (i_c == 0) | (tiles_ref[i_c] != tiles_ref[i_c - 1])
+
+    @pl.when(is_first)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cols = cols_ref[0]                               # [chunk]
+    slots = slots_ref[0]                             # [chunk]
+    vals = vals_ref[0]                               # [chunk]
+    gathered = b_ref[...][cols]                      # [chunk, bd] row gather
+    scaled = gathered * vals[:, None]
+    # Segment sum as a matmul: onehot[r, j] = (slots[j] == r).
+    rows = jax.lax.broadcasted_iota(jnp.int32, (row_tile, cols.shape[0]), 0)
+    onehot = (rows == slots[None, :]).astype(scaled.dtype)
+    o_ref[...] += jnp.dot(onehot, scaled,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "row_tile", "block_d", "interpret"))
+def csr_spmm_pallas(tile_ids: jnp.ndarray, cols: jnp.ndarray,
+                    row_slots: jnp.ndarray, vals: jnp.ndarray,
+                    b: jnp.ndarray, *, n: int, row_tile: int = 8,
+                    block_d: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """C = A @ B with A given as row-tiled CSR chunks (csr_to_row_tiles).
+
+    Args:
+      tile_ids:  [C] int32 row-tile id per chunk (non-decreasing).
+      cols:      [C, chunk] int32 column ids, zero-padded.
+      row_slots: [C, chunk] int32 row index within the tile, zero-padded.
+      vals:      [C, chunk] values, zero-padded.
+      b:         [n, d] dense operand.
+      n:         matrix dimension (static).
+      row_tile:  rows per C tile (static).
+      block_d:   d-tile width (static).
+      interpret: run in interpret mode (CPU correctness path).
+    """
+    d = b.shape[1]
+    bd = min(block_d, d)
+    if d % bd != 0:
+        raise ValueError(f"d={d} must be divisible by the d-tile {bd}")
+    num_chunks, chunk = cols.shape
+    num_tiles = (n + row_tile - 1) // row_tile
+    grid = (d // bd, num_chunks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles: (i_c, 0)),
+            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles: (i_c, 0)),
+            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles: (i_c, 0)),
+            pl.BlockSpec((n, bd), lambda i_d, i_c, tiles: (0, i_d)),
+        ],
+        out_specs=pl.BlockSpec(
+            (row_tile, bd), lambda i_d, i_c, tiles: (tiles[i_c], i_d)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_csr_kernel, row_tile=row_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_tiles * row_tile, d),
+                                       jnp.float32),
+        interpret=interpret,
+    )(tile_ids, cols, row_slots, vals, b)
+    return out[:n].astype(b.dtype)

@@ -18,8 +18,9 @@ from repro.core import sparsity_models as sm
 from repro.core.hardware import TPU_V5E
 from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
 from repro.kernels.banded_spmm import banded_spmm_pallas
+from repro.kernels.csr_spmm import csr_spmm_pallas, csr_to_row_tiles
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
-from repro.sparse.formats import BCSRMatrix
+from repro.sparse.formats import BCSRMatrix, CSRMatrix
 
 
 def _on_tpu() -> bool:
@@ -68,6 +69,24 @@ def bcsr_spmm(a: BCSRMatrix, b: jnp.ndarray, *, block_d: int = 512,
                             interpret=_interpret(interpret))
 
 
+def csr_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
+             chunk: int = 128, block_d: int = 512,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """CSR SpMM via the Pallas row-gather/segment-sum kernel.
+
+    Packs the CSR arrays into row-tiled chunks host-side (cached nowhere:
+    callers that reuse a matrix should go through repro.sparse.dispatch,
+    which caches conversions per matrix).
+    """
+    tiles, cols, slots, vals = csr_to_row_tiles(
+        np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
+        n=a.n, row_tile=row_tile, chunk=chunk)
+    return csr_spmm_pallas(jnp.asarray(tiles), jnp.asarray(cols),
+                           jnp.asarray(slots), jnp.asarray(vals), b,
+                           n=a.n, row_tile=row_tile, block_d=block_d,
+                           interpret=_interpret(interpret))
+
+
 def banded_spmm(band: jnp.ndarray, b: jnp.ndarray, *, t: int, w: int,
                 block_d: int = 512,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -111,6 +130,23 @@ class KernelRoofline:
     mxu_flops: float
     attainable_flops_per_s: float
     mxu_utilization: float
+
+
+def csr_kernel_roofline(a: CSRMatrix, d: int, *,
+                        regime: str = "random") -> KernelRoofline:
+    """Place a CSR kernel launch on the v5e roofline under its regime model.
+
+    The CSR kernel issues exactly the useful FLOPs (padding slots multiply
+    zeros, a negligible <1/chunk overhead), so MXU utilization is reported
+    as 1.0; what varies with structure is the B-traffic term of the AI.
+    """
+    tb = sm.arithmetic_intensity(regime, a.n, a.nnz, d,
+                                 sizeof_val=a.data.dtype.itemsize)
+    return KernelRoofline(
+        name="csr_spmm", ai=tb.ai, useful_flops=tb.flops,
+        mxu_flops=tb.flops,
+        attainable_flops_per_s=TPU_V5E.attainable(tb.ai),
+        mxu_utilization=1.0)
 
 
 def bcsr_kernel_roofline(a: BCSRMatrix, d: int) -> KernelRoofline:

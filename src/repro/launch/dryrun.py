@@ -36,7 +36,6 @@ import numpy as np
 from repro.configs.base import SHAPES, all_cells, get_config
 from repro.core import hlo_analysis as H
 from repro.core import hlo_flops as HF
-from repro.launch import sharding as SH
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.models import moe as MOE

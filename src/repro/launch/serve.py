@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ShapeConfig, get_config
+from repro.configs.base import get_config
 from repro.models import model as M
 
 

@@ -19,7 +19,7 @@ jit boundaries by the launch layer.
 from __future__ import annotations
 
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -16,9 +16,8 @@ O(block * seq_kv_block) — required for the 32k prefill cells.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ softmax internals.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,7 @@ Two paths:
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

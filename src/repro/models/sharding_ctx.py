@@ -7,7 +7,7 @@ tests and single-device runs need no mesh.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 

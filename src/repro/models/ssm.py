@@ -12,7 +12,6 @@ each chunk.  Decode is the O(1) recurrence update.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Tuple
 
 import jax

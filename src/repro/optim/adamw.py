@@ -8,7 +8,7 @@ need custom hooks (compression, multi-dtype state) anyway.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,10 @@
-"""Sparse formats + SpMM implementations (CSR / ELL / BCSR / DIA)."""
+"""Sparse formats, SpMM implementations, and the structure-aware dispatcher.
+
+``spmm(m, b, strategy="auto")`` is the public entry point: it classifies
+the matrix, evaluates each format's sparsity-aware roofline on the active
+hardware, and runs the winning (format, kernel) pair.  The per-format
+implementations remain exported for direct use.
+"""
 from repro.sparse.formats import (
     BCSRMatrix, CSRMatrix, DIAMatrix, ELLMatrix,
     coo_to_bcsr, coo_to_csr, coo_to_dense, coo_to_dia, coo_to_ell,
@@ -7,10 +13,15 @@ from repro.sparse.spmm import (
     IMPLEMENTATIONS, bcsr_spmm, bcsr_spmm_scan, csr_spmm, dense_spmm,
     dia_spmm, ell_spmm,
 )
+from repro.sparse.dispatch import (
+    DispatchPlan, Dispatcher, FORMATS, STRATEGIES, plan_spmm, spmm,
+)
 
 __all__ = [
     "BCSRMatrix", "CSRMatrix", "DIAMatrix", "ELLMatrix",
     "coo_to_bcsr", "coo_to_csr", "coo_to_dense", "coo_to_dia", "coo_to_ell",
     "IMPLEMENTATIONS", "bcsr_spmm", "bcsr_spmm_scan", "csr_spmm",
     "dense_spmm", "dia_spmm", "ell_spmm",
+    "DispatchPlan", "Dispatcher", "FORMATS", "STRATEGIES", "plan_spmm",
+    "spmm",
 ]

@@ -20,7 +20,6 @@ import time
 from typing import Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -1,0 +1,9 @@
+"""Test bootstrap: make ``repro`` (src layout) and ``benchmarks``
+importable regardless of how pytest is invoked."""
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

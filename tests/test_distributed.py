@@ -3,6 +3,11 @@ elastic checkpoint resharding + int8-compressed data parallelism."""
 import subprocess
 import sys
 
+import pytest
+
+# Whole-module integration tests: excluded from tier-1 (run nightly / -m slow).
+pytestmark = pytest.mark.slow
+
 
 def _run(script: str) -> str:
     r = subprocess.run([sys.executable, "-c", script],
@@ -40,6 +45,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+
 from repro.optim.compression import compressed_psum
 
 mesh = jax.make_mesh((8,), ("data",))

@@ -1,7 +1,6 @@
 """Loop-aware HLO cost model vs closed-form FLOP counts."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.hlo_flops import analyze_hlo

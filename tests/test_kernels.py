@@ -1,5 +1,4 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -43,6 +42,45 @@ def test_bcsr_kernel_empty_rows_padded():
     out = kernels.bcsr_spmm(a, b, block_d=8)
     expect = ref.bcsr_ref(np.asarray(a.blocks), a.block_rows, a.block_cols,
                           b, n=n, t=t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("pattern", ["er", "banded", "blocked", "powerlaw"])
+@pytest.mark.parametrize("d,block_d", [(8, 8), (64, 32)])
+def test_csr_kernel_sweep(pattern, d, block_d):
+    from repro.core import scale_free
+    n = 256
+    gen = {
+        "er": lambda: erdos_renyi(n, 6, seed=1),
+        "banded": lambda: gen_banded(n, 3, seed=2),
+        "blocked": lambda: gen_blocked(n, t=16, num_blocks=32,
+                                       nnz_per_block=12, seed=3),
+        "powerlaw": lambda: scale_free(n, 8, seed=4),
+    }[pattern]
+    m = gen()
+    a = sparse.coo_to_csr(m)
+    b = _b(n, d)
+    out = kernels.csr_spmm(a, b, row_tile=8, chunk=32, block_d=block_d)
+    expect = sparse.coo_to_dense(m) @ b
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_csr_kernel_empty_and_ragged_rows():
+    """Empty rows still get zeroed C tiles; rows crossing chunk boundaries
+    accumulate across grid steps."""
+    n = 64
+    rows = np.array([0] * 50 + [63] * 3)       # row 0 spans >1 chunk of 32
+    cols = np.arange(53) % n
+    from repro.core import COOMatrix
+    m_coo = COOMatrix(
+        n=n, rows=rows.astype(np.int32), cols=cols.astype(np.int32),
+        vals=np.ones(53), pattern="custom")
+    a = sparse.coo_to_csr(m_coo)
+    b = _b(n, 8)
+    out = kernels.csr_spmm(a, b, row_tile=8, chunk=32, block_d=8)
+    expect = sparse.coo_to_dense(m_coo) @ b
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=5e-4, atol=5e-4)
 
@@ -98,6 +136,10 @@ def test_kernel_rooflines():
     assert 0 < r.mxu_utilization <= 1
     assert r.useful_flops <= r.mxu_flops
     assert r.attainable_flops_per_s > 0
+    c = kernels.csr_kernel_roofline(sparse.coo_to_csr(m), 64)
+    assert c.mxu_utilization == 1.0   # CSR issues only useful FLOPs
+    assert c.useful_flops == pytest.approx(r.useful_flops)
+    assert c.ai < r.ai                # random-gather traffic dominates CSR
     g = kernels.grouped_matmul_roofline(4096, 4096, 1536, 128)
     assert g.mxu_utilization == 1.0   # block-diagonal: every block dense
     assert g.ai > r.ai                # MoE blocks beat generic sparse blocks

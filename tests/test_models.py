@@ -6,7 +6,9 @@ import pytest
 
 from repro import models
 from repro.configs import SHAPES, get_config, list_archs
-from repro.models import model as M
+
+# Whole-module integration tests: excluded from tier-1 (run nightly / -m slow).
+pytestmark = pytest.mark.slow
 
 
 def _batch(cfg, B, S, seed=0):

@@ -10,6 +10,9 @@ import pytest
 
 from repro.models import moe
 
+# Whole-module integration tests: excluded from tier-1 (run nightly / -m slow).
+pytestmark = pytest.mark.slow
+
 
 def _setup(E=8, k=2, d=16, ff=32, B=2, S=16, seed=0):
     params = moe.init_moe(jax.random.PRNGKey(seed), d, ff, E)

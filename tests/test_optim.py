@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # declared dev dep; CI installs the real one
+    from _hypothesis_stub import given, settings, st
 
 from repro.optim import adamw
 from repro.optim.compression import (

@@ -2,6 +2,11 @@
 import subprocess
 import sys
 
+import pytest
+
+# Whole-module integration tests: excluded from tier-1 (run nightly / -m slow).
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,7 +1,6 @@
 """Distributed roofline terms + analyzer on dry-run records."""
 import glob
 import json
-import os
 
 import pytest
 

@@ -1,8 +1,11 @@
 """Property tests for the paper's sparsity-aware AI models (Section III)."""
-import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # declared dev dep; CI installs the real one
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (
     PERLMUTTER_MILAN, TPU_V5E, ai_blocked, ai_blocked_tpu, ai_diagonal,

@@ -17,6 +17,9 @@ from repro.optim import adamw
 from repro.train.train_step import (make_prefill_step, make_serve_step,
                                     make_train_step, softmax_xent)
 
+# Whole-module integration tests: excluded from tier-1 (run nightly / -m slow).
+pytestmark = pytest.mark.slow
+
 
 def test_cell_matrix_shape():
     """10 archs; every arch exposes >= 3 shape cells; skips documented."""

@@ -14,6 +14,9 @@ from repro.models import attention as ATT
 from repro.optim import adamw
 from repro.train.train_step import make_train_step
 
+# Whole-module integration tests: excluded from tier-1 (run nightly / -m slow).
+pytestmark = pytest.mark.slow
+
 
 def _setup(arch="gemma-2b"):
     cfg = get_config(arch).reduced()

@@ -1,11 +1,14 @@
 """Trainer integration: loss descent, checkpoint/restart, watchdog."""
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import DataConfig
 from repro.train.trainer import Trainer, TrainerConfig
+
+import pytest
+# Whole-module integration tests: excluded from tier-1 (run nightly / -m slow).
+pytestmark = pytest.mark.slow
 
 SMALL_SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
 
