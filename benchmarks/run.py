@@ -5,14 +5,17 @@
               structure-aware dispatcher (plus one strategy="auto" row per
               cell)
   fig2        attained vs sparsity-aware roofline + paper-claims check
+  serve       streamed vs per-call dispatch across the four structures
+              (the sparse.plan serving path; rows appended to the SpMM CSV)
   kernels     Pallas kernel wall-time (interpret mode; correctness-scale)
   roofline    per-(arch x shape x mesh) three-term table from the dry-run
               records in experiments/dryrun (if present)
 
 Prints ``name,us_per_call,derived`` CSV rows plus the full SpMM CSV to
-benchmarks/out/.  ``--smoke`` runs the SpMM suite at tiny scale with one
-repeat — the CI per-PR dispatch-policy regression check; the produced
-CSV is uploaded as a workflow artifact.
+benchmarks/out/.  ``--smoke`` runs the SpMM + streamed-serving suites at
+tiny scale with few repeats — the CI per-PR dispatch-policy and
+plan-once-beats-percall regression checks; the produced CSV (including
+the streamed rows) is uploaded as a workflow artifact.
 """
 from __future__ import annotations
 
@@ -66,6 +69,39 @@ def bench_spmm(beta: float, *, scale: int = 16, d_values=None,
         _emit(f"fig2.claim.{k}", 0.0, "PASS" if v else "FAIL")
     if dispatch_claims_only and failed:
         raise SystemExit(f"dispatch claims failed: {failed}")
+
+
+def bench_stream_suite(beta: float, *, scale: int, d_values, reuses,
+                       repeats: int, csv_name: str,
+                       enforce: bool = False) -> None:
+    from benchmarks.spmm_suite import CSV_HEADER
+    from benchmarks.stream import (
+        run_stream_suite, stream_claims_check, to_csv_rows)
+    cells = run_stream_suite(beta, scale=scale, d_values=d_values,
+                             reuses=reuses, repeats=repeats)
+    path = os.path.join("benchmarks/out", csv_name)
+    os.makedirs("benchmarks/out", exist_ok=True)
+    # Appended to the SpMM CSV: one artifact per run, streamed rows keyed
+    # by their impl column (stream_r8 / percall_r8 / ...).  Start from the
+    # shared header when this suite runs first / alone.
+    fresh = not os.path.exists(path)
+    with open(path, "a") as f:
+        f.write((CSV_HEADER if fresh else "") + "\n"
+                + "\n".join(to_csv_rows(cells)))
+    for c in cells:
+        if c.reuse >= 8:
+            # us_per_call column: amortized per-RHS time (total includes
+            # that mode's planning/conversion); total stays in derived.
+            _emit(f"serve.{c.matrix}.{c.mode}.d{c.d}.r{c.reuse}",
+                  c.total_s * 1e6 / c.reuse,
+                  f"{c.gflops:.2f}GF/s;total={c.total_s * 1e3:.1f}ms;"
+                  f"chosen={c.chosen}")
+    claims = stream_claims_check(cells)
+    failed = [k for k, v in claims.items() if not v]
+    for k, v in claims.items():
+        _emit(f"serve.claim.{k}", 0.0, "PASS" if v else "FAIL")
+    if enforce and failed:
+        raise SystemExit(f"streamed-dispatch claims failed: {failed}")
 
 
 def bench_kernels() -> None:
@@ -128,8 +164,14 @@ def main() -> None:
     if args.smoke:
         bench_spmm(beta, scale=11, d_values=(1, 16, 64), repeats=3,
                    csv_name="smoke_spmm.csv", dispatch_claims_only=True)
+        bench_stream_suite(beta, scale=10, d_values=(16, 64),
+                           reuses=(1, 8), repeats=2,
+                           csv_name="smoke_spmm.csv", enforce=True)
         return
     bench_spmm(beta)
+    bench_stream_suite(beta, scale=12, d_values=(16, 64),
+                       reuses=(1, 8, 64), repeats=2,
+                       csv_name="table5_spmm.csv")
     bench_kernels()
     bench_roofline_table()
 

@@ -241,9 +241,13 @@ def dispatch_claims_check(results: List[CellResult]) -> Dict[str, bool]:
     }
 
 
+#: Shared schema for the SpMM CSV artifacts (single-shot + streamed rows).
+CSV_HEADER = ("matrix,pattern,impl,d,nnz,gflops,ai_model,"
+              "predicted_gflops,roofline_fraction,chosen")
+
+
 def to_csv(results: List[CellResult]) -> str:
-    lines = ["matrix,pattern,impl,d,nnz,gflops,ai_model,"
-             "predicted_gflops,roofline_fraction,chosen"]
+    lines = [CSV_HEADER]
     for r in results:
         lines.append(f"{r.matrix},{r.pattern},{r.impl},{r.d},{r.nnz},"
                      f"{r.gflops:.4f},{r.ai_model:.5f},"

@@ -1,15 +1,47 @@
-"""STREAM-style bandwidth measurement (paper Section IV-B).
+"""STREAM bandwidth measurement + the streamed-dispatch serving suite.
 
-The paper measures beta = 122.6 GB/s on the Perlmutter socket with STREAM;
-we measure the same quantity on this host so the roofline ceilings are
-grounded in measured bandwidth, not guesses.  Triad (a = b + s*c) is the
-canonical figure; copy is reported for reference.
+Two related benchmarks share this module:
+
+1. ``measure_bandwidth`` — STREAM-style copy/triad (paper Section IV-B).
+   The paper measures beta = 122.6 GB/s on the Perlmutter socket; we
+   measure the same quantity on this host so the roofline ceilings are
+   grounded in measured bandwidth, not guesses.
+
+2. ``run_stream_suite`` — streamed vs per-call dispatch across the four
+   paper sparsity structures (block, banded, scale-free, uniform) and
+   varying B widths, through the public ``sparse.plan`` / ``sparse.spmm``
+   API (never raw kernels).  Three modes per (matrix, d, reuse) cell:
+
+     stream          ``sparse.plan(m, BSpec(d, reuse)).execute(b)`` — one
+                     classification + conversion, then zero-dispatch replay.
+     percall         a fresh Dispatcher per call: classification, policy,
+                     roofline evaluation, and conversion paid on every
+                     right-hand side (dispatch with no persistent state).
+     percall_cached  one Dispatcher, ``spmm`` per call: plan/conversion
+                     caches warm after the first call, but every call still
+                     pays validation + cache lookups.
+
+   Totals include planning and conversion, so the cells answer the serving
+   question directly: at what reuse does planning once pay for itself?
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+import zlib
+from typing import Dict, List, Tuple
 
 import numpy as np
+
+
+def _best_of(fn, repeats: int) -> float:
+    """Min-of-N wall-clock of ``fn()`` (the suite's timing primitive)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def measure_bandwidth(n_bytes: int = 256 * 2 ** 20, repeats: int = 5):
@@ -19,25 +51,196 @@ def measure_bandwidth(n_bytes: int = 256 * 2 ** 20, repeats: int = 5):
     b = np.random.default_rng(0).random(n)
     c = np.random.default_rng(1).random(n)
 
-    def timed(fn, traffic):
-        best = float("inf")
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            fn()
-            best = min(best, time.perf_counter() - t0)
-        return traffic / best
+    copy_bw = 2 * n * 8 / _best_of(lambda: np.copyto(a, b), repeats)
 
-    copy_bw = timed(lambda: np.copyto(a, b), 2 * n * 8)
-
-    def triad():
+    def _triad():
         np.multiply(c, 3.0, out=a)
         np.add(a, b, out=a)
 
-    triad_bw = timed(triad, 3 * n * 8)
+    triad_bw = 3 * n * 8 / _best_of(_triad, repeats)
     return {"copy": copy_bw, "triad": triad_bw}
 
 
+# --------------------------------------------------------------------------
+# Streamed vs per-call dispatch suite (docs/serving.md).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamCell:
+    """One (matrix x d x reuse x mode) measurement of the serving suite."""
+
+    matrix: str
+    pattern: str
+    mode: str                 # "stream" | "percall" | "percall_cached"
+    d: int
+    reuse: int
+    nnz: int
+    total_s: float            # wall time for the whole stream, incl. planning
+    gflops: float             # useful FLOPs / total_s
+    ai_model: float           # chosen candidate's sparsity-aware AI
+    predicted_gflops: float   # amortized prediction at this reuse horizon
+    chosen: str               # format this mode actually executed
+
+
+def stream_matrices(scale: int) -> Dict[str, object]:
+    """The four paper structures at n = 2**scale (generator thunks).
+
+    Delegates to ``repro.core.patterns.serving_suite`` — the same
+    registry ``repro.launch.serve --spmm-stream`` serves — so the demo
+    and this CI-gated suite measure identical operators.
+    """
+    from repro.core.patterns import serving_suite
+    return {f"{name}_{scale}": gen
+            for name, gen in serving_suite(2 ** scale).items()}
+
+
+def _rhs_stream(n: int, d: int, k: int, seed: int = 0) -> List:
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+            for _ in range(k)]
+
+
+def run_stream_suite(beta: float, *, scale: int = 11,
+                     d_values: Tuple[int, ...] = (16, 64),
+                     reuses: Tuple[int, ...] = (1, 8, 32),
+                     repeats: int = 2) -> List[StreamCell]:
+    """Measure streamed vs per-call dispatch across structures x d x reuse.
+
+    Every mode goes through the public API (``sparse.plan`` or
+    ``sparse.spmm``); every total includes that mode's planning and
+    conversion work, which is exactly what distinguishes the modes.
+    """
+    import jax
+    from repro import sparse
+    from benchmarks.spmm_suite import make_dispatcher
+
+    results: List[StreamCell] = []
+    for name, gen in stream_matrices(scale).items():
+        m = gen()
+        for d in d_values:
+            for r in reuses:
+                # Deterministic per-(matrix, d) seed: the claim check gates
+                # CI, so its inputs must reproduce across runs.
+                seed = zlib.adler32(f"{name}:{d}".encode()) % 2 ** 16
+                bs = _rhs_stream(m.n, d, r, seed=seed)
+
+                def run_stream():
+                    disp = make_dispatcher(beta)
+                    p = sparse.plan(m, sparse.BSpec(d=d, reuse=r),
+                                    dispatcher=disp)
+                    out = None
+                    for b in bs:
+                        out = p.execute(b)
+                    jax.block_until_ready(out)
+                    return p
+
+                def run_percall():
+                    out = None
+                    for b in bs:
+                        disp = make_dispatcher(beta)
+                        out = disp.spmm(m, b, reuse=1)
+                    jax.block_until_ready(out)
+
+                def run_cached():
+                    disp = make_dispatcher(beta)
+                    out = None
+                    for b in bs:
+                        out = disp.spmm(m, b)
+                    jax.block_until_ready(out)
+                    return disp
+
+                # Audit plans for the three modes: percall plans at
+                # reuse=1; percall_cached executes the dispatcher-default
+                # horizon — label each row with the plan that mode actually
+                # runs (they can differ when amortization flips the
+                # choice).  One execute per distinct format warms the jit
+                # cache (shapes are uniform across the stream), so compile
+                # time doesn't contaminate whichever mode is timed first.
+                audit_disp = make_dispatcher(beta)
+                plan_obj = sparse.plan(m, sparse.BSpec(d=d, reuse=r),
+                                       dispatcher=audit_disp)
+                single = audit_disp.plan(m, d, reuse=1)
+                cached_plan = audit_disp.plan(m, d)
+                jax.block_until_ready(plan_obj.execute(bs[0]))
+                for fmt in {single.chosen, cached_plan.chosen} - \
+                        {plan_obj.chosen}:
+                    jax.block_until_ready(
+                        audit_disp.spmm(m, bs[0], strategy=fmt))
+
+                flops = 2.0 * m.nnz * d * r
+                audit = plan_obj.dispatch.candidate(plan_obj.chosen)
+                single_audit = single.candidate(single.chosen)
+                cached_audit = cached_plan.candidate(cached_plan.chosen)
+                for mode, fn, chosen, aud in (
+                        ("stream", run_stream, plan_obj.chosen, audit),
+                        ("percall", run_percall, single.chosen, single_audit),
+                        ("percall_cached", run_cached, cached_plan.chosen,
+                         cached_audit)):
+                    total = _best_of(fn, repeats)
+                    results.append(StreamCell(
+                        matrix=name, pattern=m.pattern, mode=mode, d=d,
+                        reuse=r, nnz=m.nnz, total_s=total,
+                        gflops=flops / total / 1e9,
+                        ai_model=aud.ai or 0.0,
+                        predicted_gflops=aud.amortized_gflops or 0.0,
+                        chosen=chosen))
+    return results
+
+
+def stream_claims_check(cells: List[StreamCell]) -> Dict[str, bool]:
+    """Serving-path acceptance: plan-once must win once reuse amortizes.
+
+    The claim gates CI (``benchmarks/run.py --smoke``): for every
+    *structure*, summed over its d cells at reuse >= 8, the streamed
+    total wall time must beat per-call dispatch — otherwise the whole
+    streaming layer is overhead.  Aggregating per matrix (rather than
+    per cell) keeps the gate meaningful while tolerating this host's
+    single-cell wall-clock spikes (2x swings between identical runs;
+    see the verify notes and spmm_suite's nnz filter for the same
+    issue in the single-shot claims).
+    """
+    totals: Dict[str, Dict[str, float]] = {}
+    for c in cells:
+        if c.reuse < 8:
+            continue
+        totals.setdefault(c.matrix, {}).setdefault(c.mode, 0.0)
+        totals[c.matrix][c.mode] += c.total_s
+    verdicts = [by_mode["stream"] < by_mode["percall"]
+                for by_mode in totals.values()
+                if "stream" in by_mode and "percall" in by_mode]
+    return {
+        "stream_plan_once_beats_percall_at_reuse_8plus":
+            bool(verdicts) and all(verdicts),
+    }
+
+
+def to_csv_rows(cells: List[StreamCell]) -> List[str]:
+    """Render cells in the smoke_spmm.csv schema (no header).
+
+    Columns mirror benchmarks/spmm_suite.to_csv so the streamed rows
+    append onto the same uploaded artifact: the mode and reuse horizon are
+    encoded in the impl column (``stream_r8``, ``percall_r8``, ...).
+    """
+    rows = []
+    for c in cells:
+        frac = c.gflops / c.predicted_gflops if c.predicted_gflops else 0.0
+        rows.append(f"{c.matrix},{c.pattern},{c.mode}_r{c.reuse},{c.d},"
+                    f"{c.nnz},{c.gflops:.4f},{c.ai_model:.5f},"
+                    f"{c.predicted_gflops:.4f},{frac:.4f},{c.chosen}")
+    return rows
+
+
 if __name__ == "__main__":
+    import pathlib
+    import sys
+    # Script invocation (python benchmarks/stream.py) puts benchmarks/ on
+    # sys.path, not the repo root; the suite imports benchmarks.spmm_suite.
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
     bw = measure_bandwidth()
     print(f"copy  {bw['copy'] / 1e9:.2f} GB/s")
     print(f"triad {bw['triad'] / 1e9:.2f} GB/s")
+    for cell in run_stream_suite(bw["triad"], scale=10, repeats=1):
+        print(f"{cell.matrix:14s} {cell.mode:14s} d={cell.d:3d} "
+              f"r={cell.reuse:3d} {cell.total_s * 1e3:8.2f} ms "
+              f"{cell.gflops:7.2f} GF/s  chosen={cell.chosen}")

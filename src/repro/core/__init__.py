@@ -14,7 +14,10 @@ from repro.core.sparsity_models import (
     hub_edge_fraction,
     mxu_utilization,
 )
-from repro.core.patterns import COOMatrix, banded, blocked, erdos_renyi, scale_free
+from repro.core.patterns import (
+    COOMatrix, banded, block_diagonal, blocked, erdos_renyi, scale_free,
+    serving_suite,
+)
 from repro.core.classify import StructureReport, classify
 
 __all__ = [
@@ -24,6 +27,7 @@ __all__ = [
     "ai_random", "ai_scale_free", "arithmetic_intensity",
     "expected_occupied_columns", "flops_spmm", "hub_edge_fraction",
     "mxu_utilization",
-    "COOMatrix", "banded", "blocked", "erdos_renyi", "scale_free",
+    "COOMatrix", "banded", "block_diagonal", "blocked", "erdos_renyi",
+    "scale_free", "serving_suite",
     "StructureReport", "classify",
 ]

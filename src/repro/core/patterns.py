@@ -198,3 +198,42 @@ def paper_suite(scale: int = 16):
         f"powerlaw_{scale}_22": lambda: scale_free(n, 16, alpha=2.2, seed=8),
         f"powerlaw_{scale}_28": lambda: scale_free(n, 16, alpha=2.8, seed=9),
     }
+
+
+def block_diagonal(n: int, t: int = 64, seed: int = 0) -> COOMatrix:
+    """Dense t x t blocks on the diagonal: the MoE expert-dispatch shape.
+
+    ``repro.models.moe`` routes tokens into per-expert capacity buckets,
+    which makes the expert FFN exactly this operator (the best case of the
+    blocked regime: z = t, MXU utilization 1).  Requires ``t`` to divide
+    ``n``.
+    """
+    if n % t != 0:
+        raise ValueError(f"n must be a multiple of t={t}, got {n}")
+    nb = n // t
+    rng = np.random.default_rng(seed)
+    base = np.repeat(np.arange(nb, dtype=np.int64) * t, t * t)
+    rr = np.tile(np.repeat(np.arange(t), t), nb)
+    cc = np.tile(np.tile(np.arange(t), t), nb)
+    rows = (base + rr).astype(np.int32)
+    cols = (base + cc).astype(np.int32)
+    vals = rng.uniform(0.5, 1.5, size=rows.shape[0]).astype(np.float64)
+    return COOMatrix(n=n, rows=rows, cols=cols, vals=vals,
+                     pattern="blocked",
+                     meta={"t": t, "num_blocks": nb, "D": float(t * t)})
+
+
+def serving_suite(n: int):
+    """The four paper structures at serving scale (generator thunks).
+
+    The single registry shared by the streamed-dispatch surfaces —
+    ``repro.launch.serve --spmm-stream`` and ``benchmarks/stream.py`` —
+    so the serving demo and the CI-gated suite measure the same
+    operators.
+    """
+    return {
+        "moe-block": lambda: block_diagonal(n, 64, seed=0),
+        "banded": lambda: banded(n, 5, fill=0.9, seed=5),
+        "scale-free": lambda: scale_free(n, 16, alpha=2.2, seed=8),
+        "uniform": lambda: erdos_renyi(n, 10, seed=2),
+    }

@@ -62,7 +62,19 @@ def pad_empty_block_rows(a: BCSRMatrix) -> BCSRMatrix:
 
 def bcsr_spmm(a: BCSRMatrix, b: jnp.ndarray, *, block_d: int = 512,
               interpret: Optional[bool] = None) -> jnp.ndarray:
-    """BCSR SpMM via the Pallas kernel (paper's CSB on TPU)."""
+    """BCSR SpMM via the Pallas kernel (paper's CSB on TPU).
+
+    Args:
+        a: dense-block container, [n, n] with t x t blocks; empty block
+            rows are zero-padded here so the kernel covers every C tile.
+        b: dense right-hand side, [n, d]; when d > ``block_d``, d must be
+            a multiple of ``block_d`` (the tile clamps to min(block_d, d)).
+        block_d: d-tile width the kernel iterates over.
+        interpret: force Pallas interpret mode; default: off-TPU only.
+
+    Returns:
+        ``C = A @ B`` as a dense [n, d] array.
+    """
     a = pad_empty_block_rows(a)
     return bcsr_spmm_pallas(a.blocks, a.block_rows, a.block_cols, b,
                             n=a.n, t=a.t, block_d=block_d,
@@ -77,6 +89,18 @@ def csr_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
     Packs the CSR arrays into row-tiled chunks host-side (cached nowhere:
     callers that reuse a matrix should go through repro.sparse.dispatch,
     which caches conversions per matrix).
+
+    Args:
+        a: CSR container, [n, n].
+        b: dense right-hand side, [n, d]; when d > ``block_d``, d must be
+            a multiple of ``block_d`` (the tile clamps to min(block_d, d)).
+        row_tile: rows handled per kernel program.
+        chunk: nonzeros packed per (tile, chunk) slot.
+        block_d: d-tile width the kernel iterates over.
+        interpret: force Pallas interpret mode; default: off-TPU only.
+
+    Returns:
+        ``C = A @ B`` as a dense [n, d] array.
     """
     tiles, cols, slots, vals = csr_to_row_tiles(
         np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
@@ -90,7 +114,19 @@ def csr_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
 def banded_spmm(band: jnp.ndarray, b: jnp.ndarray, *, t: int, w: int,
                 block_d: int = 512,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Banded SpMM via the Pallas kernel (paper's diagonal regime)."""
+    """Banded SpMM via the Pallas kernel (paper's diagonal regime).
+
+    Args:
+        band: block-band tensor [nb, 2w+1, t, t] from ``band_to_blocks``.
+        b: dense right-hand side, [n, d] with n = nb * t.
+        t: block edge; must divide n.
+        w: block half-bandwidth (diagonal offsets within ±w*t).
+        block_d: d-tile width the kernel iterates over.
+        interpret: force Pallas interpret mode; default: off-TPU only.
+
+    Returns:
+        ``C = A @ B`` as a dense [n, d] array.
+    """
     return banded_spmm_pallas(band, b, t=t, w=w, block_d=block_d,
                               interpret=_interpret(interpret))
 
@@ -98,13 +134,35 @@ def banded_spmm(band: jnp.ndarray, b: jnp.ndarray, *, t: int, w: int,
 def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray, group_ids: jnp.ndarray,
                    *, bm: int = 128, bk: int = 128, bn: int = 128,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Grouped (block-diagonal) matmul via the Pallas kernel (MoE FFN)."""
+    """Grouped (block-diagonal) matmul via the Pallas kernel (MoE FFN).
+
+    Args:
+        x: token rows sorted/padded into ``bm``-row group blocks, [T, K].
+        w: per-group weights, [E, K, N].
+        group_ids: group index per ``bm``-row block, [T / bm] int32.
+        bm, bk, bn: MXU tile sizes (rows, contraction, columns).
+        interpret: force Pallas interpret mode; default: off-TPU only.
+
+    Returns:
+        ``Y[i] = x[i] @ w[group_ids[i // bm]]`` as a dense [T, N] array.
+    """
     return grouped_matmul_pallas(x, w, group_ids, bm=bm, bk=bk, bn=bn,
                                  interpret=_interpret(interpret))
 
 
 def band_to_blocks(dia_data: np.ndarray, offsets, *, n: int, t: int):
-    """Convert DIA storage to the kernel's [nb, 2w+1, t, t] band tensor."""
+    """Convert DIA storage to the kernel's block-band tensor.
+
+    Args:
+        dia_data: DIA values, [num_offsets, n] indexed by row.
+        offsets: diagonal offsets matching ``dia_data`` rows.
+        n: matrix dimension; t must divide n for the kernel grid.
+        t: block edge of the band tensor.
+
+    Returns:
+        ``(band, w)``: band tensor [nb, 2w+1, t, t] (nb = n / t) and the
+        block half-bandwidth w, as consumed by :func:`banded_spmm`.
+    """
     nb = (n + t - 1) // t
     max_off = max(abs(int(o)) for o in offsets) if len(offsets) else 0
     w = (max_off + t - 1) // t

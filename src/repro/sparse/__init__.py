@@ -1,9 +1,14 @@
-"""Sparse formats, SpMM implementations, and the structure-aware dispatcher.
+"""Sparse formats, SpMM implementations, dispatcher, and the streaming layer.
 
-``spmm(m, b, strategy="auto")`` is the public entry point: it classifies
-the matrix, evaluates each format's sparsity-aware roofline on the active
-hardware, and runs the winning (format, kernel) pair.  The per-format
-implementations remain exported for direct use.
+``spmm(m, b, strategy="auto")`` is the one-shot public entry point: it
+classifies the matrix, evaluates each format's sparsity-aware roofline on
+the active hardware, and runs the winning (format, kernel) pair.
+
+``plan(m, b_spec)`` is the serving entry point: it runs classification,
+roofline prediction, and format conversion once, then ``plan.execute(b)``
+/ ``plan.execute_many(bs)`` replay the bound kernel across many dense
+right-hand sides (``docs/serving.md``).  The per-format implementations
+remain exported for direct use.
 """
 from repro.sparse.formats import (
     BCSRMatrix, CSRMatrix, DIAMatrix, ELLMatrix,
@@ -14,14 +19,17 @@ from repro.sparse.spmm import (
     dia_spmm, ell_spmm,
 )
 from repro.sparse.dispatch import (
-    DispatchPlan, Dispatcher, FORMATS, STRATEGIES, plan_spmm, spmm,
+    DispatchPlan, Dispatcher, FORMATS, STRATEGIES, default_dispatcher,
+    plan_spmm, spmm,
 )
+from repro.sparse.stream import BSpec, StreamPlan, as_b_spec, plan
 
 __all__ = [
     "BCSRMatrix", "CSRMatrix", "DIAMatrix", "ELLMatrix",
     "coo_to_bcsr", "coo_to_csr", "coo_to_dense", "coo_to_dia", "coo_to_ell",
     "IMPLEMENTATIONS", "bcsr_spmm", "bcsr_spmm_scan", "csr_spmm",
     "dense_spmm", "dia_spmm", "ell_spmm",
-    "DispatchPlan", "Dispatcher", "FORMATS", "STRATEGIES", "plan_spmm",
-    "spmm",
+    "DispatchPlan", "Dispatcher", "FORMATS", "STRATEGIES",
+    "default_dispatcher", "plan_spmm", "spmm",
+    "BSpec", "StreamPlan", "as_b_spec", "plan",
 ]

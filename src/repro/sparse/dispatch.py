@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -107,12 +107,24 @@ class DispatchPlan:
                 if not c.eligible}
 
     def candidate(self, name: str) -> CandidateEval:
+        """Return the :class:`CandidateEval` for format ``name``.
+
+        Args:
+            name: one of ``FORMATS`` (``"csr" | "ell" | "bcsr" | "dia"``).
+
+        Returns:
+            The audit record for that format.
+
+        Raises:
+            KeyError: if ``name`` was not evaluated in this plan.
+        """
         for c in self.candidates:
             if c.format == name:
                 return c
         raise KeyError(name)
 
     def summary(self) -> str:
+        """Render the decision as a human-readable multi-line table."""
         lines = [f"DispatchPlan(regime={self.regime}, d={self.d}, "
                  f"backend={self.backend}, hw={self.hardware}, "
                  f"reuse={self.reuse}) -> {self.chosen}"]
@@ -361,7 +373,27 @@ class Dispatcher:
 
     def plan(self, m: COOMatrix, d: int, *, strategy: str = "auto",
              reuse: Optional[int] = None) -> DispatchPlan:
-        """Plan (and cache) the (format, kernel) choice for (m, d)."""
+        """Plan (and cache) the (format, kernel) choice for ``(m, d)``.
+
+        Args:
+            m: square sparse pattern, ``[n, n]``.
+            d: dense operand width (``B`` is ``[n, d]``).
+            strategy: ``"auto"`` (roofline-predicted best) or a format name
+                from ``FORMATS`` to force that format.
+            reuse: conversion amortization horizon — the expected number of
+                SpMM executions this plan will serve.  Defaults to the
+                dispatcher's ``reuse`` (32).  Higher values let formats with
+                expensive one-time conversions (e.g. BCSR's dense blocks)
+                win on amortized throughput.
+
+        Returns:
+            The cached :class:`DispatchPlan` with per-candidate predictions.
+
+        Raises:
+            ValueError: on an unknown strategy, ``d < 1``, or a forced
+                format the applicability policy rejects for this matrix
+                (the error carries the recorded skip reason).
+        """
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {strategy!r}; choose from "
                              f"{STRATEGIES}")
@@ -396,6 +428,11 @@ class Dispatcher:
                 viable = [c for c in cands if c.format == "csr"]
             chosen = max(viable, key=lambda c: c.amortized_gflops).format
         else:
+            forced = next(c for c in cands if c.format == strategy)
+            if not forced.eligible:
+                raise ValueError(
+                    f"strategy {strategy!r} is policy-ineligible for "
+                    f"this matrix: {forced.skip_reason}")
             chosen = strategy
         plan = DispatchPlan(
             chosen=chosen, strategy=strategy, regime=report.regime, d=d,
@@ -407,28 +444,63 @@ class Dispatcher:
     def spmm(self, m: COOMatrix, b: jnp.ndarray, *,
              strategy: str = "auto",
              reuse: Optional[int] = None) -> jnp.ndarray:
-        """C = A @ B through the planned (format, kernel) pair."""
+        """Compute ``C = A @ B`` through the planned (format, kernel) pair.
+
+        Args:
+            m: square sparse pattern, ``[n, n]``.
+            b: dense right-hand side, ``[n, d]``.
+            strategy: ``"auto"`` or a forced format name (see :meth:`plan`).
+            reuse: conversion amortization horizon (see :meth:`plan`).
+
+        Returns:
+            ``C`` as a dense ``[n, d]`` array.
+
+        Raises:
+            ValueError: on a shape-incompatible ``b``, or a forced format
+                the policy rejects for this matrix (see :meth:`plan`).
+        """
         if b.ndim != 2 or b.shape[0] != m.n:
             raise ValueError(
                 f"operand shape {tuple(b.shape)} incompatible with "
                 f"[{m.n}, {m.n}] sparse matrix; expected [{m.n}, d]")
         plan = self.plan(m, int(b.shape[1]), strategy=strategy, reuse=reuse)
-        return self._execute(m, b, plan)
+        return self.executor(m, plan)(b)
 
-    def _execute(self, m: COOMatrix, b: jnp.ndarray,
-                 plan: DispatchPlan) -> jnp.ndarray:
+    def executor(self, m: COOMatrix,
+                 plan: DispatchPlan) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """Bind ``plan`` to ``m``: the execute phase, split from planning.
+
+        All one-time work — format conversion and host-side kernel layout
+        packing (row-tile chunking, band extraction, empty-block-row
+        padding) — happens here, once; the returned closure holds the
+        prepared containers directly, so replaying it across many
+        right-hand sides does no cache lookups, no classification, and no
+        conversion.  This is the primitive under
+        :class:`repro.sparse.stream.StreamPlan`.
+
+        Args:
+            m: the matrix the plan was made for.
+            plan: a :class:`DispatchPlan` from :meth:`plan`.
+
+        Returns:
+            ``run(b) -> c`` executing the chosen kernel; ``b`` is ``[n, d]``
+            (any ``d`` — the kernel tile width adapts per call), ``c`` is
+            ``[n, d]``.
+        """
         f = plan.chosen
         if plan.backend == "jax":
             mat = self.convert(m, f)
-            return jax_spmm.IMPLEMENTATIONS[f](mat, b)
-        # Pallas path.  Host-side layout packing (row-tile chunking, band
-        # extraction, empty-block-row padding) is cached per matrix like
-        # the format containers — per-call it would dominate the kernel.
+            impl = jax_spmm.IMPLEMENTATIONS[f]
+            return lambda b: impl(mat, b)
+        # Pallas path.  Packed layouts are cached per matrix like the
+        # format containers — per-call packing would dominate the kernel.
         # ELL exists for VPU-style padding; the row-tiled CSR kernel
         # already vectorizes on TPU, so ELL lowers to it.
         from repro import kernels
         from repro.kernels.csr_spmm import csr_spmm_pallas, csr_to_row_tiles
         key = self._track(m)
+        n = m.n
+        interpret = jax.default_backend() != "tpu"
         if f in ("csr", "ell"):
             ck = (key, "pallas_csr_tiles", self.bcsr_block)
             if ck not in self._converted:
@@ -439,28 +511,33 @@ class Dispatcher:
                 self._converted[ck] = tuple(
                     jnp.asarray(x) for x in (tiles, cols, slots, vals))
             tiles, cols, slots, vals = self._converted[ck]
-            return csr_spmm_pallas(
-                tiles, cols, slots, vals, b, n=m.n,
-                block_d=_pallas_block_d(b.shape[1]),
-                interpret=jax.default_backend() != "tpu")
+            return lambda b: csr_spmm_pallas(
+                tiles, cols, slots, vals, b, n=n,
+                block_d=_pallas_block_d(b.shape[1]), interpret=interpret)
         if f == "bcsr":
+            from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
             ck = (key, "pallas_bcsr_padded", self.bcsr_block)
             if ck not in self._converted:
                 self._converted[ck] = kernels.pad_empty_block_rows(
                     self.convert(m, "bcsr"))
-            return kernels.bcsr_spmm(self._converted[ck], b,
-                                     block_d=_pallas_block_d(b.shape[1]))
+            padded = self._converted[ck]
+            # Call the kernel directly: the ops.bcsr_spmm wrapper re-runs
+            # the (idempotent, host-side) empty-row padding per call.
+            return lambda b: bcsr_spmm_pallas(
+                padded.blocks, padded.block_rows, padded.block_cols, b,
+                n=padded.n, t=padded.t,
+                block_d=_pallas_block_d(b.shape[1]), interpret=interpret)
         if f == "dia":
             ck = (key, "pallas_band", self.bcsr_block)
             if ck not in self._converted:
                 dia = self.convert(m, "dia")
-                t = _pallas_band_tile(m.n)
+                t = _pallas_band_tile(n)
                 band, w = kernels.band_to_blocks(
-                    np.asarray(dia.data), dia.offsets, n=m.n, t=t)
+                    np.asarray(dia.data), dia.offsets, n=n, t=t)
                 self._converted[ck] = (band, w, t)
             band, w, t = self._converted[ck]
-            return kernels.banded_spmm(band, b, t=t, w=w,
-                                       block_d=_pallas_block_d(b.shape[1]))
+            return lambda b: kernels.banded_spmm(
+                band, b, t=t, w=w, block_d=_pallas_block_d(b.shape[1]))
         raise ValueError(f"unknown format {f!r}")
 
 
@@ -468,9 +545,29 @@ class Dispatcher:
 _DEFAULT = Dispatcher()
 
 
+def default_dispatcher() -> Dispatcher:
+    """Return the module-level :class:`Dispatcher` behind ``spmm``/``plan_spmm``."""
+    return _DEFAULT
+
+
 def plan_spmm(m: COOMatrix, d: int, *, strategy: str = "auto",
               reuse: Optional[int] = None) -> DispatchPlan:
-    """Plan the (format, kernel) choice for (m, d) on the default dispatcher."""
+    """Plan the (format, kernel) choice for ``(m, d)`` on the default dispatcher.
+
+    Args:
+        m: square sparse pattern (``repro.core.patterns.COOMatrix``), [n, n].
+        d: dense operand width.
+        strategy: ``"auto"`` or a format from ``FORMATS`` to force.
+        reuse: conversion amortization horizon (default 32 executions).
+
+    Returns:
+        An inspectable :class:`DispatchPlan`; ``plan.summary()`` renders the
+        per-candidate predictions and skip reasons.
+
+    Raises:
+        ValueError: on an unknown strategy, ``d < 1``, or a forced format
+            the applicability policy rejects for this matrix.
+    """
     return _DEFAULT.plan(m, d, strategy=strategy, reuse=reuse)
 
 
@@ -478,7 +575,25 @@ def spmm(m: COOMatrix, b: jnp.ndarray, *, strategy: str = "auto",
          reuse: Optional[int] = None) -> jnp.ndarray:
     """Structure-aware SpMM: ``C = A @ B`` via the default dispatcher.
 
-    ``strategy="auto"`` picks the roofline-predicted best format for the
-    matrix's detected structure; a format name forces that format.
+    ``strategy="auto"`` classifies the matrix structure, evaluates each
+    candidate format's sparsity-aware roofline, and executes the winning
+    (format, kernel) pair; a format name forces that format.  Plans and
+    conversions are cached per matrix.  For a stream of right-hand sides
+    against one matrix, prefer :func:`repro.sparse.stream.plan` — it binds
+    the kernel once and replays it with zero dispatch overhead.
+
+    Args:
+        m: square sparse pattern (``repro.core.patterns.COOMatrix``), [n, n].
+        b: dense right-hand side, ``[n, d]``.
+        strategy: ``"auto"`` or a format from ``FORMATS`` to force.
+        reuse: conversion amortization horizon (default 32 executions).
+
+    Returns:
+        ``C`` as a dense ``[n, d]`` array (same dtype family as ``b``).
+
+    Raises:
+        ValueError: on a shape-incompatible ``b``, or a forced format the
+            applicability policy rejects for this matrix (the error
+            carries the recorded skip reason).
     """
     return _DEFAULT.spmm(m, b, strategy=strategy, reuse=reuse)

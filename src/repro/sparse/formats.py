@@ -40,6 +40,7 @@ class CSRMatrix:
 
     @property
     def nnz(self) -> int:
+        """Number of stored nonzeros."""
         return int(self.data.shape[0])
 
 
@@ -56,6 +57,7 @@ class ELLMatrix:
 
     @property
     def k(self) -> int:
+        """Padded slots per row (the max row degree at conversion time)."""
         return int(self.data.shape[1])
 
 
@@ -82,10 +84,12 @@ class BCSRMatrix:
 
     @property
     def num_blocks(self) -> int:
+        """Count of stored (nonzero) t x t blocks — the paper's N."""
         return int(self.blocks.shape[0])
 
     @property
     def nb(self) -> int:
+        """Number of block rows/cols (n / t)."""
         return self.n // self.t
 
 
@@ -103,6 +107,7 @@ class DIAMatrix:
 
     @property
     def num_offsets(self) -> int:
+        """Number of stored diagonals."""
         return int(self.data.shape[0])
 
 
@@ -114,6 +119,16 @@ _register(DIAMatrix, ("data",), ("offsets", "n"))
 # --------------------------------------------------------------------------
 
 def coo_to_csr(m, dtype=jnp.float32) -> CSRMatrix:
+    """Convert a COO pattern to CSR.
+
+    Args:
+        m: ``repro.core.patterns.COOMatrix`` (square, [n, n]).
+        dtype: value dtype of the container.
+
+    Returns:
+        :class:`CSRMatrix` with row-major-sorted ``data``/``indices``
+        ([nnz]), ``indptr`` ([n+1]), and precomputed ``row_ids`` ([nnz]).
+    """
     order = np.lexsort((m.cols, m.rows))
     rows = m.rows[order]
     cols = m.cols[order]
@@ -130,6 +145,18 @@ def coo_to_csr(m, dtype=jnp.float32) -> CSRMatrix:
 
 
 def coo_to_ell(m, dtype=jnp.float32, max_k: int | None = None) -> ELLMatrix:
+    """Convert a COO pattern to padded ELLPACK.
+
+    Args:
+        m: ``repro.core.patterns.COOMatrix`` (square, [n, n]).
+        dtype: value dtype of the container.
+        max_k: cap on slots per row; defaults to the max row degree.
+            Entries beyond the cap are dropped (callers gate on padding
+            blow-up before choosing ELL).
+
+    Returns:
+        :class:`ELLMatrix` with zero-padded ``data``/``indices`` [n, k].
+    """
     counts = np.bincount(m.rows, minlength=m.n)
     k = int(counts.max()) if max_k is None else max_k
     k = max(k, 1)
@@ -148,6 +175,20 @@ def coo_to_ell(m, dtype=jnp.float32, max_k: int | None = None) -> ELLMatrix:
 
 
 def coo_to_bcsr(m, t: int, dtype=jnp.float32) -> BCSRMatrix:
+    """Convert a COO pattern to dense-block BCSR.
+
+    Args:
+        m: ``repro.core.patterns.COOMatrix``; ``m.n`` must divide by ``t``.
+        t: block edge (t x t dense blocks).
+        dtype: value dtype of the blocks.
+
+    Returns:
+        :class:`BCSRMatrix` with ``blocks`` [N, t, t] sorted by
+        (block_row, block_col) and CSR-style ``block_ptr`` [nb+1].
+
+    Raises:
+        ValueError: if ``m.n`` is not a multiple of ``t``.
+    """
     if m.n % t != 0:
         raise ValueError(f"matrix dim {m.n} not divisible by block size {t}")
     bi = m.rows.astype(np.int64) // t
@@ -174,6 +215,20 @@ def coo_to_bcsr(m, t: int, dtype=jnp.float32) -> BCSRMatrix:
 
 
 def coo_to_dia(m, dtype=jnp.float32, max_offsets: int = 64) -> DIAMatrix:
+    """Convert a COO pattern to diagonal (DIA) storage.
+
+    Args:
+        m: ``repro.core.patterns.COOMatrix`` (square, [n, n]).
+        dtype: value dtype of the container.
+        max_offsets: refuse matrices with more distinct diagonals than
+            this (DIA storage is k*n values; only banded matrices fit).
+
+    Returns:
+        :class:`DIAMatrix` with ``data`` [num_offsets, n] indexed by row.
+
+    Raises:
+        ValueError: if the matrix has more than ``max_offsets`` diagonals.
+    """
     offs = np.unique(m.cols.astype(np.int64) - m.rows)
     if offs.shape[0] > max_offsets:
         raise ValueError(
@@ -188,6 +243,7 @@ def coo_to_dia(m, dtype=jnp.float32, max_offsets: int = 64) -> DIAMatrix:
 
 
 def coo_to_dense(m, dtype=jnp.float32) -> jnp.ndarray:
+    """Materialize the full dense [n, n] array (reference/tests only)."""
     dense = np.zeros((m.n, m.n), dtype=dtype)
     dense[m.rows, m.cols] = m.vals.astype(dtype)
     return jnp.asarray(dense)

@@ -34,7 +34,7 @@ def csr_spmm(a: CSRMatrix, b: jnp.ndarray) -> jnp.ndarray:
 def ell_spmm(a: ELLMatrix, b: jnp.ndarray) -> jnp.ndarray:
     """Vectorized over the padded slot dimension; zero padding is harmless."""
 
-    def slot(carry, k):
+    def _slot(carry, k):
         acc = carry
         cols = a.indices[:, k]                    # [n]
         vals = a.data[:, k]                       # [n]
@@ -42,7 +42,7 @@ def ell_spmm(a: ELLMatrix, b: jnp.ndarray) -> jnp.ndarray:
         return acc, None
 
     init = jnp.zeros((a.n, b.shape[1]), dtype=b.dtype)
-    out, _ = jax.lax.scan(slot, init, jnp.arange(a.k))
+    out, _ = jax.lax.scan(_slot, init, jnp.arange(a.k))
     return out
 
 
@@ -99,14 +99,14 @@ def bcsr_spmm_scan(a: BCSRMatrix, b: jnp.ndarray,
     d = b.shape[1]
     b_tiles = b.reshape(a.nb, a.t, d)
 
-    def step(acc, blk):
+    def _step(acc, blk):
         block, br, bc = blk
         prod = block @ b_tiles[bc]
         acc = acc.at[br].add(prod)
         return acc, None
 
     init = jnp.zeros((a.nb, a.t, d), dtype=jnp.float32)
-    out, _ = jax.lax.scan(step, init,
+    out, _ = jax.lax.scan(_step, init,
                           (a.blocks, a.block_rows, a.block_cols))
     return out.reshape(a.n, d).astype(b.dtype)
 

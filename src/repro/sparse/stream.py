@@ -1,0 +1,264 @@
+"""Batched/streamed SpMM: plan once, execute across many right-hand sides.
+
+The dispatcher (``repro.sparse.dispatch``) already splits SpMM into a plan
+phase (classify the structure, evaluate each format's sparsity-aware
+roofline, amortize conversion cost over an expected reuse count) and an
+execute phase (convert once, run the chosen kernel).  This module is the
+serving-path API on top of that split:
+
+    spec = BSpec(d=64, reuse=256)        # 256 RHS batches expected
+    plan = sparse.plan(m, spec)          # classify + model + convert ONCE
+    c0 = plan.execute(b0)                # zero-dispatch replay
+    cs = plan.execute_many(bs)           # a stream of [n, d] batches
+    cw = plan.execute_wide(b_wide)       # one [n, D] B, column-sharded
+
+Two things distinguish this from calling ``sparse.spmm`` per batch:
+
+1. **Amortized planning.**  The expected reuse count in the ``BSpec`` is
+   fed into the DispatchPlan's conversion-cost model, so the chosen format
+   can differ from the single-shot choice: a format that is faster per
+   call but expensive to build (BCSR's dense t x t blocks) loses at
+   ``reuse=1`` and wins at ``reuse=1000`` (the paper's conversion-cost
+   amortization term, Section III).
+
+2. **Zero-dispatch replay.**  ``execute`` holds the bound kernel closure
+   from ``Dispatcher.executor`` — no classification, no plan-cache or
+   conversion-cache lookups, no policy checks per call.  Per-call dispatch
+   pays those on every batch; the streamed benchmark
+   (``benchmarks/stream.py``) measures the gap across the four paper
+   sparsity structures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.patterns import COOMatrix
+from repro.sparse import dispatch as _dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class BSpec:
+    """Static description of the dense right-hand-side stream.
+
+    Attributes:
+        d: width of each right-hand side (every ``B`` is ``[n, d]``).
+        reuse: expected number of executions the plan will serve.  This is
+            the conversion amortization horizon fed to the dispatcher's
+            cost model; under-estimating it biases the choice toward
+            cheap-to-build formats, over-estimating toward
+            fast-steady-state ones.
+        dtype: element dtype of the stream (informational; kernels follow
+            the dtype of each ``B`` actually passed).
+    """
+
+    d: int
+    reuse: int = 32
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        """Validate widths and horizons at construction time."""
+        if self.d < 1:
+            raise ValueError(f"BSpec.d must be >= 1, got {self.d}")
+        if self.reuse < 1:
+            raise ValueError(f"BSpec.reuse must be >= 1, got {self.reuse}")
+
+
+def as_b_spec(spec: Union[int, BSpec, jnp.ndarray],
+              *, reuse: Optional[int] = None) -> BSpec:
+    """Coerce a width, an example batch, or a BSpec into a ``BSpec``.
+
+    Args:
+        spec: an ``int`` width ``d``, an example ``[n, d]`` array, or an
+            existing :class:`BSpec` (returned as-is unless ``reuse`` is
+            given).
+        reuse: optional override for the expected execution count.
+
+    Returns:
+        A normalized :class:`BSpec`.
+    """
+    if isinstance(spec, BSpec):
+        return spec if reuse is None else dataclasses.replace(
+            spec, reuse=reuse)
+    if isinstance(spec, (int, np.integer)):
+        return BSpec(d=int(spec), reuse=32 if reuse is None else reuse)
+    shape = getattr(spec, "shape", None)
+    if shape is not None and len(shape) == 2:
+        return BSpec(d=int(shape[1]), reuse=32 if reuse is None else reuse,
+                     dtype=getattr(spec, "dtype", jnp.float32))
+    raise TypeError(
+        f"b_spec must be an int width, a BSpec, or an example [n, d] "
+        f"array; got {type(spec).__name__}")
+
+
+class StreamPlan:
+    """A persistent, replayable SpMM plan for one matrix and a RHS stream.
+
+    Construction runs the whole one-time pipeline — structure
+    classification, per-format roofline evaluation with the stream's reuse
+    horizon, format conversion, and kernel layout packing — so every
+    ``execute`` afterwards is a bare kernel launch.  Instances are
+    intended to live as long as the serving process holds the matrix.
+    """
+
+    def __init__(self, dispatcher: _dispatch.Dispatcher, m: COOMatrix,
+                 spec: BSpec, *, strategy: str = "auto"):
+        """Plan and bind; see :func:`plan` for the usual entry point.
+
+        Args:
+            dispatcher: the :class:`repro.sparse.dispatch.Dispatcher` that
+                owns caches and hardware model.
+            m: square sparse pattern, ``[n, n]``.
+            spec: the stream description (width + expected reuse).
+            strategy: ``"auto"`` or a forced format name.
+        """
+        self._m = m
+        self.spec = spec
+        self.dispatch = dispatcher.plan(m, spec.d, strategy=strategy,
+                                        reuse=spec.reuse)
+        # Eager bind: conversion + packing happen NOW, not on first
+        # execute.  (The first execute still pays the kernel's one-time
+        # XLA compile for this shape — latency-sensitive servers should
+        # warm up with one batch, as launch/serve.py does.)
+        self._run = dispatcher.executor(m, self.dispatch)
+        self.executed = 0
+
+    @property
+    def n(self) -> int:
+        """Matrix dimension; every RHS must have ``n`` rows."""
+        return self._m.n
+
+    @property
+    def chosen(self) -> str:
+        """The format the amortized roofline model selected."""
+        return self.dispatch.chosen
+
+    def _check(self, b: jnp.ndarray, *, width: Optional[int] = None) -> None:
+        """Reject shape-mismatched operands with a precise message."""
+        if b.ndim != 2 or b.shape[0] != self.n:
+            raise ValueError(
+                f"operand shape {tuple(b.shape)} incompatible with plan for "
+                f"[{self.n}, {self.n}] matrix; expected [{self.n}, d]")
+        if width is not None and b.shape[1] != width:
+            raise ValueError(
+                f"operand width {b.shape[1]} != planned width {width}; "
+                f"use execute_wide for other widths")
+
+    def execute(self, b: jnp.ndarray) -> jnp.ndarray:
+        """Run ``C = A @ B`` for one planned-width batch.
+
+        Args:
+            b: dense right-hand side, ``[n, spec.d]``.
+
+        Returns:
+            ``C`` as a dense ``[n, spec.d]`` array.
+        """
+        self._check(b, width=self.spec.d)
+        out = self._run(b)
+        self.executed += 1          # count only replays that succeeded
+        return out
+
+    def execute_many(self, bs: Union[jnp.ndarray, Sequence[jnp.ndarray],
+                                     Iterable[jnp.ndarray]]) -> jnp.ndarray:
+        """Replay the bound kernel across a stream of right-hand sides.
+
+        Args:
+            bs: either a stacked ``[k, n, d]`` array or an iterable of
+                ``k`` arrays of shape ``[n, d]``.
+
+        Returns:
+            The stacked results, ``[k, n, d]``.  Result dtype follows the
+            operands, except an empty stream, which has no operands to
+            follow and returns a ``[0, n, d]`` array of ``spec.dtype``.
+        """
+        if hasattr(bs, "ndim") and getattr(bs, "ndim", 0) == 3:
+            bs = [bs[i] for i in range(bs.shape[0])]
+        outs = []
+        for b in bs:
+            self._check(b, width=self.spec.d)
+            outs.append(self._run(b))
+            self.executed += 1
+        if not outs:
+            return jnp.zeros((0, self.n, self.spec.d), dtype=self.spec.dtype)
+        return jnp.stack(outs)
+
+    def execute_wide(self, b: jnp.ndarray,
+                     *, block_d: Optional[int] = None) -> jnp.ndarray:
+        """Column-shard one wide ``B`` through the plan.
+
+        A ``[n, D]`` operand with ``D`` much larger than the planned width
+        is split into column blocks of ``block_d`` (default: the planned
+        ``spec.d``), each block executed through the bound kernel, and the
+        results concatenated — the sharded-serving shape where one model's
+        activation matrix is wider than the per-request batch the plan was
+        tuned for.
+
+        Args:
+            b: dense right-hand side, ``[n, D]``.
+            block_d: column block width; defaults to ``spec.d``.
+
+        Returns:
+            ``C`` as a dense ``[n, D]`` array.
+        """
+        self._check(b)
+        block_d = self.spec.d if block_d is None else int(block_d)
+        if block_d < 1:
+            raise ValueError(f"block_d must be >= 1, got {block_d}")
+        total = b.shape[1]
+        if total == 0:
+            return jnp.zeros((self.n, 0), dtype=b.dtype)
+        outs = []
+        for lo in range(0, total, block_d):
+            outs.append(self._run(b[:, lo:lo + block_d]))
+            self.executed += 1
+        return jnp.concatenate(outs, axis=1)
+
+    def reset_stats(self) -> None:
+        """Zero the execution counter (e.g. after warm-up calls, so
+        :meth:`stats` reflects served requests only)."""
+        self.executed = 0
+
+    def stats(self) -> dict:
+        """Amortization audit: planned horizon vs realized executions.
+
+        Returns:
+            Dict with ``chosen``, ``regime``, ``backend``, ``planned_reuse``,
+            ``executed``, and ``reuse_utilization`` (executed / planned —
+            below 1.0 means the conversion cost was amortized over fewer
+            calls than the model assumed).
+        """
+        return {
+            "chosen": self.dispatch.chosen,
+            "regime": self.dispatch.regime,
+            "backend": self.dispatch.backend,
+            "planned_reuse": self.spec.reuse,
+            "executed": self.executed,
+            "reuse_utilization": self.executed / self.spec.reuse,
+        }
+
+
+def plan(m: COOMatrix, b_spec: Union[int, BSpec, jnp.ndarray], *,
+         strategy: str = "auto", reuse: Optional[int] = None,
+         dispatcher: Optional[_dispatch.Dispatcher] = None) -> StreamPlan:
+    """Plan once for a stream of right-hand sides; the serving entry point.
+
+    Args:
+        m: square sparse pattern (``repro.core.patterns.COOMatrix``), [n, n].
+        b_spec: the stream description — an ``int`` width, a
+            :class:`BSpec`, or an example ``[n, d]`` batch.
+        strategy: ``"auto"`` or a format name to force.
+        reuse: shorthand override for ``BSpec.reuse`` (expected number of
+            executions).
+        dispatcher: dispatcher to plan on; defaults to the module-level one
+            shared with ``sparse.spmm``.
+
+    Returns:
+        A bound :class:`StreamPlan`; call ``execute`` / ``execute_many`` /
+        ``execute_wide`` on it.
+    """
+    spec = as_b_spec(b_spec, reuse=reuse)
+    disp = dispatcher or _dispatch.default_dispatcher()
+    return StreamPlan(disp, m, spec, strategy=strategy)

@@ -1,0 +1,201 @@
+"""Streamed dispatch (repro.sparse.stream): plan once, execute many."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.core import banded, blocked, erdos_renyi, scale_free
+from repro.core.hardware import HOST_CPU
+
+N = 512
+
+
+def _mats():
+    return {
+        "uniform": erdos_renyi(N, 8, seed=1),
+        "banded": banded(N, 3, fill=0.9, seed=2),
+        "block": blocked(N, t=32, num_blocks=N // 16, nnz_per_block=320,
+                         seed=3),
+        "scale_free": scale_free(N, 8, alpha=2.2, seed=4),
+    }
+
+
+def _b(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+# --------------------------------------------------------------------- #
+# Numerics: streamed execution must match per-call dispatch exactly.
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("pattern", sorted(_mats()))
+def test_execute_many_matches_per_call_spmm(pattern):
+    """Acceptance: plan(m, spec).execute_many(bs) == per-call spmm(m, b)."""
+    m = _mats()[pattern]
+    bs = [_b(N, 8, seed=s) for s in range(4)]
+    plan = sparse.plan(m, sparse.BSpec(d=8, reuse=len(bs)))
+    outs = plan.execute_many(bs)
+    assert outs.shape == (len(bs), N, 8)
+    for i, b in enumerate(bs):
+        ref = sparse.spmm(m, b)
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    dense = np.asarray(sparse.coo_to_dense(m))
+    np.testing.assert_allclose(np.asarray(outs[0]),
+                               dense @ np.asarray(bs[0]),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_execute_many_accepts_stacked_array_and_empty():
+    m = _mats()["uniform"]
+    stacked = jnp.stack([_b(N, 4, seed=s) for s in range(3)])
+    plan = sparse.plan(m, 4, reuse=3)
+    outs = plan.execute_many(stacked)
+    assert outs.shape == (3, N, 4)
+    empty = plan.execute_many([])
+    assert empty.shape == (0, N, 4)
+
+
+def test_execute_wide_shards_columns():
+    """One wide B sharded into planned-width column blocks (+ remainder)."""
+    m = _mats()["block"]
+    plan = sparse.plan(m, sparse.BSpec(d=8, reuse=16))
+    wide = _b(N, 20, seed=9)          # 8 + 8 + 4: remainder block included
+    out = plan.execute_wide(wide)
+    ref = np.asarray(sparse.coo_to_dense(m)) @ np.asarray(wide)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=5e-4, atol=5e-4)
+
+
+def test_pallas_backend_stream_matches_dense():
+    disp = sparse.Dispatcher(backend="pallas", bcsr_block=32)
+    m = _mats()["block"]
+    plan = sparse.plan(m, 16, reuse=4, dispatcher=disp)
+    b = _b(N, 16, seed=5)
+    ref = np.asarray(sparse.coo_to_dense(m)) @ np.asarray(b)
+    np.testing.assert_allclose(np.asarray(plan.execute(b)), ref,
+                               rtol=5e-4, atol=5e-4)
+
+
+# --------------------------------------------------------------------- #
+# The reuse horizon in the cost model.
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("pattern", sorted(_mats()))
+def test_reuse_monotonicity(pattern):
+    """A higher expected reuse never picks a format with a worse amortized
+    prediction: the chosen candidate's amortized GFLOP/s is nondecreasing
+    in the reuse horizon (argmax of per-format curves that each increase
+    with reuse)."""
+    m = _mats()[pattern]
+    prev = -1.0
+    for r in (1, 2, 4, 8, 32, 256, 4096):
+        plan = sparse.plan_spmm(m, 16, reuse=r)
+        amort = plan.candidate(plan.chosen).amortized_gflops
+        assert amort >= prev - 1e-12, (r, amort, prev)
+        prev = amort
+
+
+def test_reuse_horizon_can_flip_the_chosen_format():
+    """The streaming layer's reason to exist: fed a short horizon the
+    dispatcher picks the cheap-to-build format, fed a long one the
+    expensive-but-faster format (conversion amortization, Section III)."""
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=10e9)
+    m = blocked(N, t=64, num_blocks=8, nnz_per_block=320, seed=11)
+    # Compute-bound ceilings tuned so BCSR's steady state narrowly beats
+    # CSR while its dense-block conversion is ~4x CSR's: the flip point
+    # lands between reuse=1 and reuse=8.
+    disp = sparse.Dispatcher(
+        hardware=hw, backend="jax",
+        efficiency={"csr": (0.02, 0.0), "bcsr": (0.30, 0.0),
+                    "ell": (0.001, 0.0), "dia": (0.001, 0.0)})
+    short = sparse.plan(m, sparse.BSpec(d=16, reuse=1), dispatcher=disp)
+    long = sparse.plan(m, sparse.BSpec(d=16, reuse=10_000), dispatcher=disp)
+    assert short.chosen == "csr"
+    assert long.chosen == "bcsr"
+    # Both still compute the same thing.
+    b = _b(N, 16, seed=3)
+    np.testing.assert_allclose(np.asarray(short.execute(b)),
+                               np.asarray(long.execute(b)),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_spec_coercion_and_stats():
+    m = _mats()["banded"]
+    p1 = sparse.plan(m, 8)                       # int width
+    assert p1.spec == sparse.BSpec(d=8, reuse=32)
+    p2 = sparse.plan(m, _b(N, 8), reuse=7)       # example batch
+    assert p2.spec.d == 8 and p2.spec.reuse == 7
+    p2.execute(_b(N, 8))
+    s = p2.stats()
+    assert s["planned_reuse"] == 7 and s["executed"] == 1
+    assert s["chosen"] == p2.chosen
+    p2.reset_stats()                             # warm-up discount path
+    assert p2.stats()["executed"] == 0
+    assert sparse.as_b_spec(sparse.BSpec(d=4), reuse=9).reuse == 9
+
+
+def test_execute_wide_zero_columns():
+    m = _mats()["banded"]
+    plan = sparse.plan(m, 8, reuse=4)
+    out = plan.execute_wide(jnp.zeros((N, 0), jnp.float32))
+    assert out.shape == (N, 0)
+    assert plan.stats()["executed"] == 0
+
+
+def test_stream_plan_bad_inputs_raise():
+    m = _mats()["uniform"]
+    plan = sparse.plan(m, 8, reuse=4)
+    with pytest.raises(ValueError):
+        plan.execute(_b(N, 16))                  # wrong width
+    with pytest.raises(ValueError):
+        plan.execute(_b(N + 2, 8))               # wrong row count
+    with pytest.raises(ValueError):
+        plan.execute_wide(_b(N, 16), block_d=0)
+    with pytest.raises(ValueError):
+        sparse.BSpec(d=0)
+    with pytest.raises(ValueError):
+        sparse.BSpec(d=4, reuse=0)
+    with pytest.raises(TypeError):
+        sparse.as_b_spec("csr")
+    with pytest.raises(ValueError):
+        sparse.plan(m, 8, strategy="nope")
+
+
+def test_serve_spmm_stream_path(capsys):
+    """The launch-layer serving integration (serve.py --spmm-stream)."""
+    import argparse
+    from repro.launch.serve import build_stream_matrix, serve_spmm_stream
+
+    m = build_stream_matrix("moe-block", 256)
+    # Block-diagonal expert dispatch: every nonzero inside a diagonal block.
+    assert m.n == 256 and m.nnz == 256 * 64
+    assert (m.rows // 64 == m.cols // 64).all()
+    for structure in ("banded", "scale-free", "uniform"):
+        assert build_stream_matrix(structure, 256).nnz > 0
+    with pytest.raises(ValueError):
+        build_stream_matrix("nope", 256)
+    with pytest.raises(ValueError):
+        build_stream_matrix("moe-block", 100)     # not a multiple of t
+
+    args = argparse.Namespace(spmm_structure="moe-block", spmm_n=256,
+                              spmm_d=8, spmm_steps=2, spmm_compare=True)
+    serve_spmm_stream(args)
+    out = capsys.readouterr().out
+    assert "planned for reuse=2" in out
+    assert "steady-state" in out
+    assert "per-call dispatch" in out
+    assert "'executed': 2" in out                 # warm-up discounted
+
+
+def test_stream_uses_shared_default_dispatcher_caches():
+    """sparse.plan with no dispatcher reuses the module-level caches, so a
+    following sparse.spmm hits the same plan/conversion entries."""
+    m = erdos_renyi(N, 4, seed=42)
+    disp = sparse.default_dispatcher()
+    plan = sparse.plan(m, 8, reuse=32)
+    cached = disp.plan(m, 8)
+    assert cached is plan.dispatch

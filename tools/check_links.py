@@ -1,0 +1,91 @@
+"""Intra-repo Markdown link checker — the CI docs gate.
+
+Scans README.md and docs/*.md (or any paths passed as arguments) for
+Markdown links and verifies that every relative target resolves to a file
+or directory in the repo.  External schemes (http/https/mailto) and
+pure-anchor links are skipped; a `#fragment` suffix on a relative link is
+stripped before the existence check.
+
+    python tools/check_links.py            # default file set
+    python tools/check_links.py docs/*.md  # explicit
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import urllib.parse
+from typing import List, Tuple
+
+# [text](target) — target up to ')' with an optional "title", optionally
+# <>-wrapped, spaces allowed; also matches images ![alt](target).
+# Reference-style links are rare here and skipped.
+_LINK_RE = re.compile(
+    r"\[[^\]]*\]\(\s*<?([^)>\"]+?)>?(?:\s+\"[^\"]*\")?\s*\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_links(text: str) -> List[Tuple[int, str]]:
+    """Yield (1-based line number, raw target) for every Markdown link."""
+    out = []
+    for i, line in enumerate(text.splitlines(), start=1):
+        for match in _LINK_RE.finditer(line):
+            out.append((i, match.group(1)))
+    return out
+
+
+def broken_links(path: pathlib.Path,
+                 root: pathlib.Path) -> List[Tuple[int, str]]:
+    """Return (line, target) for every intra-repo link that doesn't resolve.
+
+    Relative targets resolve against the Markdown file's own directory;
+    absolute-style targets (leading ``/``) resolve against the repo root.
+    """
+    out = []
+    text = path.read_text(encoding="utf-8")
+    for line, target in iter_links(text):
+        target = target.strip()
+        if target.startswith(_SKIP_PREFIXES):
+            continue
+        rel = urllib.parse.unquote(target.split("#", 1)[0])
+        if not rel:
+            continue
+        base = root if rel.startswith("/") else path.parent
+        candidate = (base / rel.lstrip("/")).resolve()
+        if not candidate.exists():
+            out.append((line, target))
+    return out
+
+
+def default_files(root: pathlib.Path) -> List[pathlib.Path]:
+    """README.md plus every Markdown file under docs/."""
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def main(argv: List[str]) -> int:
+    """Check the given (or default) files; print breaks; return exit code."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = ([pathlib.Path(a) for a in argv] if argv
+             else default_files(root))
+    total_broken = 0
+    for f in files:
+        f = f.resolve()
+        name = f.relative_to(root) if f.is_relative_to(root) else f
+        if not f.is_file():
+            print(f"{name}: no such file")
+            total_broken += 1
+            continue
+        for line, target in broken_links(f, root):
+            print(f"{name}:{line}: broken link -> {target}")
+            total_broken += 1
+    if total_broken:
+        print(f"{total_broken} broken intra-repo link(s)")
+        return 1
+    print(f"checked {len(files)} file(s): all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
