@@ -1,6 +1,11 @@
 """Benchmark harness — one section per paper table/figure.
 
   stream      beta measurement (paper Section IV-B)
+  calibrate   (--calibrate) on-host ceiling calibration: fit per-format
+              (peak_fraction, d_half) from a microbenchmark sweep and
+              persist per HardwareSpec fingerprint, so later dispatch
+              predictions use measured ceilings instead of the baked-in
+              DEFAULT_EFFICIENCY constants
   table5      SpMM GFLOP/s across formats x matrices x d, via the
               structure-aware dispatcher (plus one strategy="auto" row per
               cell)
@@ -39,6 +44,22 @@ def bench_stream() -> float:
     _emit("stream.triad", (time.perf_counter() - t0) * 1e6,
           f"{bw['triad'] / 1e9:.2f}GB/s")
     return bw["triad"]
+
+
+def bench_calibrate(beta: float) -> None:
+    import dataclasses
+    from repro.core.calibrate import CalibrationStore, calibrate
+    from repro.core.hardware import HOST_CPU
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=beta)
+    store = CalibrationStore()
+    t0 = time.perf_counter()
+    cal = calibrate(hw, backend="jax", store=store)
+    _emit("calibrate.total", (time.perf_counter() - t0) * 1e6,
+          f"saved={store.path_for(hw)}")
+    for e in cal.entries:
+        _emit(f"calibrate.{e.format}", 0.0,
+              f"peak_fraction={e.peak_fraction:.4f};d_half={e.d_half:.1f};"
+              f"sustained={e.sustained_gflops:.2f}GF/s")
 
 
 def bench_spmm(beta: float, *, scale: int = 16, d_values=None,
@@ -158,9 +179,17 @@ def main() -> None:
     parser.add_argument("--smoke", action="store_true",
                         help="tiny-scale SpMM suite only (CI per-PR check); "
                              "writes benchmarks/out/smoke_spmm.csv")
+    parser.add_argument("--calibrate", action="store_true",
+                        help="fit + persist on-host per-format compute "
+                             "ceilings before (or instead of) the suites; "
+                             "subsequent dispatcher predictions use them")
     args = parser.parse_args()
     print("name,us_per_call,derived")
     beta = bench_stream()
+    if args.calibrate:
+        bench_calibrate(beta)
+        if not args.smoke:
+            return
     if args.smoke:
         bench_spmm(beta, scale=11, d_values=(1, 16, 64), repeats=3,
                    csv_name="smoke_spmm.csv", dispatch_claims_only=True)

@@ -62,19 +62,35 @@ def run_suite(beta: float, scale: int | None = None,
               d_values=None, impls=None, repeats=None,
               dispatcher: Optional[sparse.Dispatcher] = None
               ) -> List[CellResult]:
+    from repro.kernels import registry as kernel_registry
     cfg = SPMM_CONFIG
     scale = scale or cfg.scale
     d_values = d_values or cfg.d_values
     impls = impls or cfg.implementations
     repeats = repeats or cfg.repeats
     disp = dispatcher or make_dispatcher(beta, bcsr_block=cfg.bcsr_block)
+    # Only benchmark formats with a kernel registered for the resolved
+    # backend (the same registry the dispatcher executes through).
+    backend = disp._resolve_backend()
+    impls = [f for f in impls
+             if f in kernel_registry.formats_for(backend)]
     results: List[CellResult] = []
     rng = np.random.default_rng(0)
 
+    provenance_reported = False
     for name, gen in paper_suite(scale).items():
         m = gen()
-        for reported, reason in disp.plan(m, d_values[0]).skips.items():
+        first = disp.plan(m, d_values[0])
+        for reported, reason in first.skips.items():
             print(f"# skip {reported} on {name}: {reason}")
+        if not provenance_reported:
+            provenance_reported = True
+            srcs = sorted(set(first.ceiling_sources.values()))
+            print(f"# compute ceilings: "
+                  f"{ {f: s for f, s in sorted(first.ceiling_sources.items())} }"
+                  if srcs != ["default"] else
+                  "# compute ceilings: DEFAULT_EFFICIENCY (no calibration "
+                  "for this HardwareSpec; run benchmarks/run.py --calibrate)")
         for d in d_values:
             b = np.asarray(rng.normal(size=(m.n, d)), dtype=np.float32)
             b = jax.numpy.asarray(b)

@@ -7,6 +7,8 @@ same dataclass so every roofline routine is hardware-agnostic.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +31,24 @@ class HardwareSpec:
     def attainable(self, ai: float) -> float:
         """Classic roofline: P = min(beta * AI, pi)."""
         return min(self.hbm_bandwidth * ai, self.peak_flops)
+
+    def fingerprint(self) -> str:
+        """Stable id of this spec's *compute* identity (12 hex chars).
+
+        Keys persisted kernel calibrations (``repro.core.calibrate``): a
+        calibration fitted on one device must not be applied to another.
+        Bandwidth fields are deliberately excluded — ``hbm_bandwidth`` is
+        routinely replaced by the run-time STREAM measurement
+        (``benchmarks/spmm_suite.make_dispatcher``), and the fitted
+        ``(peak_fraction, d_half)`` ceilings describe the compute side
+        of the roofline, which that substitution does not change.
+        """
+        payload = json.dumps({
+            "name": self.name, "peak_flops": self.peak_flops,
+            "vmem_bytes": self.vmem_bytes,
+            "mxu_tile": list(self.mxu_tile),
+        }, sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:12]
 
 
 # --- The paper's evaluation platform (Table IV + measured STREAM beta). ---

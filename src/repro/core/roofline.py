@@ -22,6 +22,34 @@ from repro.core.sparsity_models import TrafficBreakdown
 
 
 @dataclasses.dataclass(frozen=True)
+class ComputeCeiling:
+    """A format implementation's compute ceiling on one host.
+
+    The dispatcher caps the bandwidth roofline ``beta * AI`` with
+
+        peak * peak_fraction * useful_fraction * d / (d + d_half)
+
+    in useful FLOP/s: ``peak_fraction`` is the fraction of hardware peak
+    the implementation sustains at large d on its *issued* FLOPs,
+    ``d_half`` the dense width at which per-nonzero index/bookkeeping
+    overhead halves throughput (it amortizes over the d dense columns).
+    ``source`` records provenance: ``"default"`` (the baked-in container
+    constants), ``"calibrated"`` (fitted by ``repro.core.calibrate`` on
+    this host), or ``"override"`` (``Dispatcher(efficiency=...)``).
+    """
+
+    peak_fraction: float
+    d_half: float
+    source: str = "default"
+
+    def attainable(self, peak_flops: float, useful_fraction: float,
+                   d: int) -> float:
+        """The ceiling in useful FLOP/s for dense width ``d``."""
+        return (peak_flops * self.peak_fraction * useful_fraction
+                * d / (d + self.d_half))
+
+
+@dataclasses.dataclass(frozen=True)
 class RooflinePoint:
     """One kernel/workload placed on a device roofline."""
 

@@ -1,11 +1,26 @@
-"""Pallas TPU kernels for the paper's compute hot-spots (SpMM variants)."""
+"""Pallas TPU kernels for the paper's compute hot-spots (SpMM variants).
+
+``repro.kernels.registry`` is the uniform entry point: one ``KernelSpec``
+(layout prep, launch, roofline estimate, VMEM footprint) per
+``(format, backend)`` pair.  The container-level wrappers below are kept
+for direct kernel use.
+"""
+from repro.kernels import registry
 from repro.kernels.ops import (
     band_to_blocks, banded_spmm, bcsr_kernel_roofline, bcsr_spmm,
-    csr_kernel_roofline, csr_spmm, grouped_matmul, grouped_matmul_roofline,
-    pad_empty_block_rows,
+    csr_kernel_roofline, csr_spmm, dia_kernel_roofline, grouped_matmul,
+    grouped_matmul_roofline, pad_empty_block_rows,
 )
+from repro.kernels.registry import (
+    KernelContext, KernelRoofline, KernelSpec, choose_b_tile,
+    feature_matrix, formats_for,
+)
+
 __all__ = [
+    "registry",
     "band_to_blocks", "banded_spmm", "bcsr_kernel_roofline", "bcsr_spmm",
-    "csr_kernel_roofline", "csr_spmm", "grouped_matmul",
-    "grouped_matmul_roofline", "pad_empty_block_rows",
+    "csr_kernel_roofline", "csr_spmm", "dia_kernel_roofline",
+    "grouped_matmul", "grouped_matmul_roofline", "pad_empty_block_rows",
+    "KernelContext", "KernelRoofline", "KernelSpec", "choose_b_tile",
+    "feature_matrix", "formats_for",
 ]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: CSR row-gather / segment-sum SpMM.
+"""Pallas TPU kernel: CSR row-gather / segment-sum SpMM with a streamed B.
 
 TPU realization of the paper's CSR baseline (the random-regime
 implementation): every nonzero gathers its row of B and the products are
@@ -9,18 +9,23 @@ segment sum becomes an MXU matmul:
     are padded to whole chunks of ``chunk`` entries (sliced-ELL style
     packing of the CSR arrays, built host-side by ``csr_to_row_tiles``);
   * one grid step processes one chunk: it gathers ``chunk`` rows of B from
-    the VMEM-resident operand, scales by the nonzero values, and reduces
+    the VMEM-resident slab, scales by the nonzero values, and reduces
     into the tile's C block with a one-hot [row_tile, chunk] matmul — the
     segment-sum expressed as MXU work instead of scatter traffic;
   * chunk -> row-tile ownership arrives via scalar prefetch (like the BCSR
     kernel's block coordinates), so the C tile stays resident in VMEM for
     all chunks of a tile and is written exactly once.
 
-B is held whole in VMEM (BlockSpec over the full [n, bd] slab per d-tile):
-the gather targets are data-dependent, so there is no index map that could
-stream it.  That bounds this kernel to n * bd * 4 <= VMEM — fine for the
-correctness scales exercised here; larger n would shard B's rows and
-partial-sum C, which the dispatcher notes as a skip reason instead.
+B streaming (propagation-blocking style, Gu et al. 2020): the gather
+targets are data-dependent, so no index map could stream B row-by-row —
+but the *host* can.  ``csr_to_row_tiles`` optionally groups each row
+tile's nonzeros by the B row slab they gather from (``b_tile`` rows per
+slab) and records the slab id per chunk.  The kernel's B BlockSpec then
+covers one ``[b_tile, bd]`` slab, selected per chunk through scalar
+prefetch, and column indices are stored slab-local.  VMEM now holds one
+slab instead of all of B, so the kernel scales past the old
+``n * bd * 4 <= VMEM`` bound; with ``b_tile=None`` (one slab spanning all
+rows) the layout and kernel reduce exactly to the unstreamed original.
 
 Padding slots carry value 0 (and column/row-slot 0), so they contribute
 nothing; every row tile owns at least one chunk, so every C block is
@@ -29,7 +34,7 @@ visited and zeroed even for empty rows.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,46 +45,85 @@ from jax.experimental.pallas import tpu as pltpu
 
 def csr_to_row_tiles(indptr: np.ndarray, indices: np.ndarray,
                      data: np.ndarray, *, n: int, row_tile: int = 8,
-                     chunk: int = 128) -> Tuple[np.ndarray, np.ndarray,
-                                                np.ndarray, np.ndarray]:
+                     chunk: int = 128,
+                     b_tile: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray, np.ndarray]:
     """Pack CSR arrays into fixed-size chunks grouped by row tile.
 
-    Returns ``(tile_ids[C], cols[C, chunk], row_slots[C, chunk],
-    vals[C, chunk])`` where chunk ``c`` belongs to row tile ``tile_ids[c]``
+    Returns ``(tile_ids[C], b_tile_ids[C], cols[C, chunk],
+    row_slots[C, chunk], vals[C, chunk])`` where chunk ``c`` belongs to row
+    tile ``tile_ids[c]``, gathers only from B row slab ``b_tile_ids[c]``,
     and ``row_slots`` are row indices *within* the tile.  Chunks of a tile
     are contiguous; empty tiles still get one all-zero chunk.
+
+    With ``b_tile=None`` there is a single slab spanning all rows:
+    ``b_tile_ids`` is all zeros and ``cols`` are global row indices of B.
+    With ``b_tile=bt`` each row tile's nonzeros are partitioned by
+    ``col // bt`` (ascending slab order) and ``cols`` become slab-local
+    (``col - slab * bt``), so the kernel only needs one ``[bt, bd]`` slab
+    of B resident per chunk.
     """
     indptr = np.asarray(indptr)
     indices = np.asarray(indices)
     data = np.asarray(data)
     num_tiles = (n + row_tile - 1) // row_tile
-    tile_ids, cols_c, slots_c, vals_c = [], [], [], []
+    tile_ids, slab_ids, cols_c, slots_c, vals_c = [], [], [], [], []
+
+    def emit(tile: int, slab: int, cols: np.ndarray, slots: np.ndarray,
+             vals: np.ndarray) -> None:
+        cnt = cols.shape[0]
+        n_chunks = max(1, -(-cnt // chunk))
+        c = np.zeros(n_chunks * chunk, dtype=np.int32)
+        s = np.zeros(n_chunks * chunk, dtype=np.int32)
+        v = np.zeros(n_chunks * chunk, dtype=data.dtype)
+        c[:cnt] = cols
+        s[:cnt] = slots
+        v[:cnt] = vals
+        tile_ids.extend([tile] * n_chunks)
+        slab_ids.extend([slab] * n_chunks)
+        cols_c.append(c.reshape(n_chunks, chunk))
+        slots_c.append(s.reshape(n_chunks, chunk))
+        vals_c.append(v.reshape(n_chunks, chunk))
+
     for tile in range(num_tiles):
         r0 = tile * row_tile
         r1 = min(r0 + row_tile, n)
         lo, hi = int(indptr[r0]), int(indptr[r1])
-        cnt = hi - lo
-        n_chunks = max(1, -(-cnt // chunk))
-        cols = np.zeros(n_chunks * chunk, dtype=np.int32)
-        slots = np.zeros(n_chunks * chunk, dtype=np.int32)
-        vals = np.zeros(n_chunks * chunk, dtype=data.dtype)
-        cols[:cnt] = indices[lo:hi]
-        vals[:cnt] = data[lo:hi]
+        cols = indices[lo:hi].astype(np.int64)
+        vals = data[lo:hi]
         row_of_nz = np.repeat(np.arange(r0, r1),
                               np.diff(indptr[r0:r1 + 1]).astype(np.int64))
-        slots[:cnt] = (row_of_nz - r0).astype(np.int32)
-        tile_ids.extend([tile] * n_chunks)
-        cols_c.append(cols.reshape(n_chunks, chunk))
-        slots_c.append(slots.reshape(n_chunks, chunk))
-        vals_c.append(vals.reshape(n_chunks, chunk))
+        slots = (row_of_nz - r0).astype(np.int32)
+        if b_tile is None:
+            emit(tile, 0, cols.astype(np.int32), slots, vals)
+            continue
+        slabs = cols // b_tile
+        if cols.shape[0] == 0:
+            emit(tile, 0, cols.astype(np.int32), slots, vals)
+            continue
+        # Stable partition by slab: chunks of a tile stay contiguous and
+        # visit slabs in ascending order (sequential-ish B traffic).
+        order = np.argsort(slabs, kind="stable")
+        cols, vals, slots, slabs = (cols[order], vals[order], slots[order],
+                                    slabs[order])
+        bounds = np.flatnonzero(np.diff(slabs)) + 1
+        for seg_cols, seg_slots, seg_vals, seg_slabs in zip(
+                np.split(cols, bounds), np.split(slots, bounds),
+                np.split(vals, bounds), np.split(slabs, bounds)):
+            slab = int(seg_slabs[0])
+            emit(tile, slab, (seg_cols - slab * b_tile).astype(np.int32),
+                 seg_slots, seg_vals)
     return (np.asarray(tile_ids, dtype=np.int32),
+            np.asarray(slab_ids, dtype=np.int32),
             np.concatenate(cols_c), np.concatenate(slots_c),
             np.concatenate(vals_c))
 
 
-def _csr_kernel(tiles_ref, cols_ref, slots_ref, vals_ref, b_ref, o_ref, *,
-                row_tile: int):
+def _csr_kernel(tiles_ref, slabs_ref, cols_ref, slots_ref, vals_ref, b_ref,
+                o_ref, *, row_tile: int):
     """One grid step: gather-scale one chunk, one-hot-matmul into its C tile."""
+    del slabs_ref  # consumed by the B index map
     i_c = pl.program_id(1)
     # First chunk of this row tile in this d-pass: zero the resident C block.
     is_first = (i_c == 0) | (tiles_ref[i_c] != tiles_ref[i_c - 1])
@@ -88,7 +132,7 @@ def _csr_kernel(tiles_ref, cols_ref, slots_ref, vals_ref, b_ref, o_ref, *,
     def _zero():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    cols = cols_ref[0]                               # [chunk]
+    cols = cols_ref[0]                               # [chunk] slab-local
     slots = slots_ref[0]                             # [chunk]
     vals = vals_ref[0]                               # [chunk]
     gathered = b_ref[...][cols]                      # [chunk, bd] row gather
@@ -101,43 +145,56 @@ def _csr_kernel(tiles_ref, cols_ref, slots_ref, vals_ref, b_ref, o_ref, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "row_tile", "block_d", "interpret"))
-def csr_spmm_pallas(tile_ids: jnp.ndarray, cols: jnp.ndarray,
-                    row_slots: jnp.ndarray, vals: jnp.ndarray,
-                    b: jnp.ndarray, *, n: int, row_tile: int = 8,
-                    block_d: int = 512, interpret: bool = True) -> jnp.ndarray:
+                   static_argnames=("n", "row_tile", "b_tile", "block_d",
+                                    "interpret"))
+def csr_spmm_pallas(tile_ids: jnp.ndarray, b_tile_ids: jnp.ndarray,
+                    cols: jnp.ndarray, row_slots: jnp.ndarray,
+                    vals: jnp.ndarray, b: jnp.ndarray, *, n: int,
+                    row_tile: int = 8, b_tile: Optional[int] = None,
+                    block_d: int = 512, interpret: bool = True
+                    ) -> jnp.ndarray:
     """C = A @ B with A given as row-tiled CSR chunks (csr_to_row_tiles).
 
     Args:
-      tile_ids:  [C] int32 row-tile id per chunk (non-decreasing).
-      cols:      [C, chunk] int32 column ids, zero-padded.
-      row_slots: [C, chunk] int32 row index within the tile, zero-padded.
-      vals:      [C, chunk] values, zero-padded.
-      b:         [n, d] dense operand.
-      n:         matrix dimension (static).
-      row_tile:  rows per C tile (static).
-      block_d:   d-tile width (static).
-      interpret: run in interpret mode (CPU correctness path).
+      tile_ids:   [C] int32 row-tile id per chunk (non-decreasing).
+      b_tile_ids: [C] int32 B row-slab id per chunk (all zeros when the
+                  layout was packed with ``b_tile=None``).
+      cols:       [C, chunk] int32 column ids, slab-local, zero-padded.
+      row_slots:  [C, chunk] int32 row index within the tile, zero-padded.
+      vals:       [C, chunk] values, zero-padded.
+      b:          [n, d] dense operand.
+      n:          matrix dimension (static).
+      row_tile:   rows per C tile (static).
+      b_tile:     B rows per VMEM-resident slab (static); must match the
+                  ``b_tile`` the layout was packed with.  None holds B
+                  whole (single slab).
+      block_d:    d-tile width (static).
+      interpret:  run in interpret mode (CPU correctness path).
     """
     d = b.shape[1]
     bd = min(block_d, d)
     if d % bd != 0:
         raise ValueError(f"d={d} must be divisible by the d-tile {bd}")
+    bt = b.shape[0] if b_tile is None else b_tile
+    if b.shape[0] % bt != 0:
+        pad = bt - b.shape[0] % bt
+        b = jnp.concatenate([b, jnp.zeros((pad, d), b.dtype)])
     num_chunks, chunk = cols.shape
     num_tiles = (n + row_tile - 1) // row_tile
     grid = (d // bd, num_chunks)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles: (i_c, 0)),
-            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles: (i_c, 0)),
-            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles: (i_c, 0)),
-            pl.BlockSpec((n, bd), lambda i_d, i_c, tiles: (0, i_d)),
+            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles, slabs: (i_c, 0)),
+            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles, slabs: (i_c, 0)),
+            pl.BlockSpec((1, chunk), lambda i_d, i_c, tiles, slabs: (i_c, 0)),
+            pl.BlockSpec((bt, bd),
+                         lambda i_d, i_c, tiles, slabs: (slabs[i_c], i_d)),
         ],
         out_specs=pl.BlockSpec(
-            (row_tile, bd), lambda i_d, i_c, tiles: (tiles[i_c], i_d)),
+            (row_tile, bd), lambda i_d, i_c, tiles, slabs: (tiles[i_c], i_d)),
     )
     out = pl.pallas_call(
         functools.partial(_csr_kernel, row_tile=row_tile),
@@ -145,5 +202,5 @@ def csr_spmm_pallas(tile_ids: jnp.ndarray, cols: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((num_tiles * row_tile, d),
                                        jnp.float32),
         interpret=interpret,
-    )(tile_ids, cols, row_slots, vals, b)
+    )(tile_ids, b_tile_ids, cols, row_slots, vals, b)
     return out[:n].astype(b.dtype)

@@ -1,21 +1,27 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Container-level compat wrappers over the kernel registry.
 
-Handles layout preparation (empty-block-row padding, band extraction),
-backend selection (interpret=True anywhere but real TPU), and exposes the
-paper's roofline estimate for each kernel invocation so callers can place
-the launch on the sparsity-aware roofline before running it.
+The registry (``repro.kernels.registry``) is the system entry point: one
+:class:`~repro.kernels.registry.KernelSpec` per ``(format, backend)``
+pair, consumed by the dispatcher, the streaming layer, the calibration
+sweep, and the benchmark suite.  This module keeps the original
+container-level call signatures (``csr_spmm(CSRMatrix, b)`` etc.) for
+direct kernel use and the kernel test sweeps; layout helpers and the
+roofline-estimate types live in the registry and are re-exported here.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sparsity_models as sm
-from repro.core.hardware import TPU_V5E
+# Re-exported for backward compatibility: these moved to the registry.
+from repro.kernels.registry import (          # noqa: F401
+    KernelRoofline, band_to_blocks, bcsr_kernel_roofline,
+    csr_kernel_roofline, dia_kernel_roofline, grouped_matmul_roofline,
+    pad_empty_block_rows,
+)
 from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
 from repro.kernels.banded_spmm import banded_spmm_pallas
 from repro.kernels.csr_spmm import csr_spmm_pallas, csr_to_row_tiles
@@ -23,41 +29,8 @@ from repro.kernels.grouped_matmul import grouped_matmul_pallas
 from repro.sparse.formats import BCSRMatrix, CSRMatrix
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def _interpret(flag: Optional[bool]) -> bool:
-    return (not _on_tpu()) if flag is None else flag
-
-
-def pad_empty_block_rows(a: BCSRMatrix) -> BCSRMatrix:
-    """Ensure every block row owns >= 1 block (zero block on the diagonal).
-
-    The Pallas kernel writes a C tile only when its block row is visited;
-    padding guarantees total coverage without in-kernel masking.
-    """
-    nb = a.nb
-    present = np.zeros(nb, dtype=bool)
-    rows_np = np.asarray(a.block_rows)
-    present[rows_np] = True
-    missing = np.nonzero(~present)[0].astype(np.int32)
-    if missing.size == 0:
-        return a
-    blocks = jnp.concatenate(
-        [a.blocks, jnp.zeros((missing.size, a.t, a.t), a.blocks.dtype)])
-    rows = np.concatenate([rows_np, missing])
-    cols = np.concatenate([np.asarray(a.block_cols), missing])
-    order = np.argsort(rows, kind="stable")
-    counts = np.bincount(rows, minlength=nb)
-    ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
-    return BCSRMatrix(
-        blocks=blocks[jnp.asarray(order)],
-        block_rows=jnp.asarray(rows[order].astype(np.int32)),
-        block_cols=jnp.asarray(cols[order].astype(np.int32)),
-        block_ptr=jnp.asarray(ptr),
-        n=a.n, t=a.t, nnz=a.nnz,
-    )
+    return (jax.default_backend() != "tpu") if flag is None else flag
 
 
 def bcsr_spmm(a: BCSRMatrix, b: jnp.ndarray, *, block_d: int = 512,
@@ -83,12 +56,13 @@ def bcsr_spmm(a: BCSRMatrix, b: jnp.ndarray, *, block_d: int = 512,
 
 def csr_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
              chunk: int = 128, block_d: int = 512,
+             b_tile: Optional[int] = None,
              interpret: Optional[bool] = None) -> jnp.ndarray:
     """CSR SpMM via the Pallas row-gather/segment-sum kernel.
 
     Packs the CSR arrays into row-tiled chunks host-side (cached nowhere:
     callers that reuse a matrix should go through repro.sparse.dispatch,
-    which caches conversions per matrix).
+    which caches prepared layouts per matrix).
 
     Args:
         a: CSR container, [n, n].
@@ -97,17 +71,21 @@ def csr_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
         row_tile: rows handled per kernel program.
         chunk: nonzeros packed per (tile, chunk) slot.
         block_d: d-tile width the kernel iterates over.
+        b_tile: B rows per VMEM-resident slab; None holds B whole.  The
+            dispatcher picks this from ``HardwareSpec.vmem_bytes`` so the
+            kernel streams B past VMEM (``registry.choose_b_tile``).
         interpret: force Pallas interpret mode; default: off-TPU only.
 
     Returns:
         ``C = A @ B`` as a dense [n, d] array.
     """
-    tiles, cols, slots, vals = csr_to_row_tiles(
+    tiles, slabs, cols, slots, vals = csr_to_row_tiles(
         np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
-        n=a.n, row_tile=row_tile, chunk=chunk)
-    return csr_spmm_pallas(jnp.asarray(tiles), jnp.asarray(cols),
-                           jnp.asarray(slots), jnp.asarray(vals), b,
-                           n=a.n, row_tile=row_tile, block_d=block_d,
+        n=a.n, row_tile=row_tile, chunk=chunk, b_tile=b_tile)
+    return csr_spmm_pallas(jnp.asarray(tiles), jnp.asarray(slabs),
+                           jnp.asarray(cols), jnp.asarray(slots),
+                           jnp.asarray(vals), b, n=a.n, row_tile=row_tile,
+                           b_tile=b_tile, block_d=block_d,
                            interpret=_interpret(interpret))
 
 
@@ -148,83 +126,3 @@ def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray, group_ids: jnp.ndarray,
     """
     return grouped_matmul_pallas(x, w, group_ids, bm=bm, bk=bk, bn=bn,
                                  interpret=_interpret(interpret))
-
-
-def band_to_blocks(dia_data: np.ndarray, offsets, *, n: int, t: int):
-    """Convert DIA storage to the kernel's block-band tensor.
-
-    Args:
-        dia_data: DIA values, [num_offsets, n] indexed by row.
-        offsets: diagonal offsets matching ``dia_data`` rows.
-        n: matrix dimension; t must divide n for the kernel grid.
-        t: block edge of the band tensor.
-
-    Returns:
-        ``(band, w)``: band tensor [nb, 2w+1, t, t] (nb = n / t) and the
-        block half-bandwidth w, as consumed by :func:`banded_spmm`.
-    """
-    nb = (n + t - 1) // t
-    max_off = max(abs(int(o)) for o in offsets) if len(offsets) else 0
-    w = (max_off + t - 1) // t
-    band = np.zeros((nb, 2 * w + 1, t, t), dtype=np.asarray(dia_data).dtype)
-    dia = np.asarray(dia_data)
-    for oi, off in enumerate(offsets):
-        off = int(off)
-        for r in range(n):
-            c = r + off
-            if 0 <= c < n and dia[oi, r] != 0:
-                bi, bj = r // t, c // t
-                band[bi, bj - bi + w, r % t, c % t] = dia[oi, r]
-    return jnp.asarray(band), w
-
-
-@dataclasses.dataclass(frozen=True)
-class KernelRoofline:
-    """Sparsity-aware placement of one kernel launch on the v5e roofline."""
-
-    name: str
-    ai: float
-    useful_flops: float
-    mxu_flops: float
-    attainable_flops_per_s: float
-    mxu_utilization: float
-
-
-def csr_kernel_roofline(a: CSRMatrix, d: int, *,
-                        regime: str = "random") -> KernelRoofline:
-    """Place a CSR kernel launch on the v5e roofline under its regime model.
-
-    The CSR kernel issues exactly the useful FLOPs (padding slots multiply
-    zeros, a negligible <1/chunk overhead), so MXU utilization is reported
-    as 1.0; what varies with structure is the B-traffic term of the AI.
-    """
-    tb = sm.arithmetic_intensity(regime, a.n, a.nnz, d,
-                                 sizeof_val=a.data.dtype.itemsize)
-    return KernelRoofline(
-        name="csr_spmm", ai=tb.ai, useful_flops=tb.flops,
-        mxu_flops=tb.flops,
-        attainable_flops_per_s=TPU_V5E.attainable(tb.ai),
-        mxu_utilization=1.0)
-
-
-def bcsr_kernel_roofline(a: BCSRMatrix, d: int) -> KernelRoofline:
-    """Apply the TPU blocked model (DESIGN.md Section 3) to a launch."""
-    tb = sm.ai_blocked_tpu(a.n, a.nnz, d, t=a.t, num_blocks=a.num_blocks,
-                           sizeof_val=a.blocks.dtype.itemsize)
-    util = sm.mxu_utilization(a.nnz, a.t, a.num_blocks)
-    return KernelRoofline(
-        name="bcsr_spmm", ai=tb.ai, useful_flops=tb.flops,
-        mxu_flops=2.0 * d * a.t * a.t * a.num_blocks,
-        attainable_flops_per_s=TPU_V5E.attainable(tb.ai),
-        mxu_utilization=util)
-
-
-def grouped_matmul_roofline(T: int, K: int, N: int, E: int, *,
-                            itemsize: int = 2) -> KernelRoofline:
-    """Block-diagonal case: every block dense => MXU utilization 1.0."""
-    flops = 2.0 * T * K * N
-    bytes_moved = itemsize * (T * K + E * K * N + T * N)
-    ai = flops / bytes_moved
-    return KernelRoofline(
-        name="grouped_matmul", ai=ai, useful_flops=flops, mxu_flops=flops,
-        attainable_flops_per_s=TPU_V5E.attainable(ai), mxu_utilization=1.0)

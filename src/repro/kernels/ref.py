@@ -10,6 +10,19 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def csr_ref(indptr, indices, data, b, *, n: int):
+    """Densify the CSR arrays on host, then one dense matmul."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    data = np.asarray(data, dtype=np.float64)
+    dense = np.zeros((n, n), dtype=np.float64)
+    for r in range(n):
+        for k in range(int(indptr[r]), int(indptr[r + 1])):
+            dense[r, int(indices[k])] += data[k]
+    return jnp.asarray(dense @ np.asarray(b, dtype=np.float64)).astype(
+        b.dtype)
+
+
 def bcsr_ref(blocks, block_rows, block_cols, b, *, n: int, t: int):
     """Densify the block structure on host, then one dense matmul."""
     blocks = np.asarray(blocks)

@@ -1,0 +1,551 @@
+"""Kernel registry: every SpMM kernel behind one ``KernelSpec`` interface.
+
+The dispatcher used to hard-code one executor branch per format — layout
+packing, kernel call, and VMEM assumptions scattered between
+``sparse/dispatch.py`` and ``kernels/ops.py``.  This module makes the
+kernel layer uniform: each ``(format, backend)`` pair registers a
+:class:`KernelSpec` bundling
+
+  * ``prepare(m, ctx)``  — one-time host-side layout prep (format
+    conversion, row-tile chunking, band extraction, empty-row padding);
+  * ``run(layout, b, ctx)`` — the per-call kernel launch (Pallas call or
+    pure-JAX implementation), tile widths adapted to ``b``;
+  * ``estimate(m, d, ctx)`` — the sparsity-aware roofline placement of a
+    launch (AI, useful vs issued FLOPs, attainable GFLOP/s);
+  * ``vmem_footprint(n, d, ctx)`` — the kernel's modeled resident VMEM
+    working set in bytes (0 for XLA-managed jax backends).
+
+``repro.sparse.dispatch.Dispatcher.executor`` resolves the winning plan
+through :func:`get`; ``repro.sparse.stream`` replays the bound closure;
+``benchmarks/spmm_suite.py`` validates its format list against
+:func:`formats_for`; and ``repro.core.calibrate`` sweeps every registered
+spec to fit measured compute ceilings.  :func:`spmm` is the one-call
+registry entry point for direct use.
+
+The CSR Pallas spec is where the VMEM model matters: ``prepare`` picks the
+B row-slab size from ``ctx.hardware.vmem_bytes`` (``choose_b_tile``), so
+the kernel streams B slab-by-slab and stays eligible at any ``n`` instead
+of capping out at ``n * bd * 4 <= VMEM``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparsity_models as sm
+from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec
+from repro.kernels.banded_spmm import banded_spmm_pallas
+from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
+from repro.kernels.csr_spmm import csr_spmm_pallas, csr_to_row_tiles
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+
+BACKENDS: Tuple[str, ...] = ("jax", "pallas")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pallas_block_d(d: int) -> int:
+    """Largest d-tile (<= 512) dividing d; the kernels require d % bd == 0."""
+    for bd in (512, 256, 128, 64, 32, 16, 8, 4, 2):
+        if d % bd == 0:
+            return bd
+    return 1
+
+
+def pallas_band_tile(n: int) -> int:
+    """Largest MXU-friendly tile edge dividing n (banded Pallas kernel)."""
+    for t in (128, 64, 32, 16, 8, 4, 2):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def choose_b_tile(n: int, vmem_bytes: int, *, bd: int = 512,
+                  sizeof_val: int = 4) -> Optional[int]:
+    """B row-slab size for the streamed CSR kernel, from the VMEM budget.
+
+    Half the VMEM goes to the resident B slab (the rest covers the C tile,
+    index chunks, gather scratch, and double buffering).  Returns ``None``
+    when all of B fits — the layout then reduces to the unstreamed
+    original (one slab, global column ids).
+    """
+    if vmem_bytes <= 0:
+        return None
+    slab_rows = (vmem_bytes // 2) // (bd * sizeof_val)
+    if slab_rows >= n:
+        return None
+    return max(8, int(slab_rows) // 8 * 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContext:
+    """Knobs a :class:`KernelSpec` needs to prepare and launch.
+
+    Attributes:
+        hardware: ceilings of the target device; ``vmem_bytes`` drives the
+            streamed-CSR slab size and the footprint models.
+        bcsr_block: BCSR block edge t.
+        max_dia_offsets: DIA conversion cap (mirrors the dispatch policy).
+        interpret: force Pallas interpret mode; None = off-TPU only.
+        row_tile: CSR kernel rows per C tile.
+        chunk: CSR kernel nonzeros per packed chunk.
+        b_tile: explicit B row-slab override for the streamed CSR kernel;
+            None picks it from ``hardware.vmem_bytes`` (``choose_b_tile``).
+        convert: optional ``(m, format) -> container`` hook so prepare
+            reuses the caller's conversion cache (the dispatcher passes
+            its own ``convert`` method); None converts directly.
+    """
+
+    hardware: HardwareSpec = HOST_CPU
+    bcsr_block: int = 64
+    max_dia_offsets: int = 64
+    interpret: Optional[bool] = None
+    row_tile: int = 8
+    chunk: int = 128
+    b_tile: Optional[int] = None
+    convert: Optional[Callable[[Any, str], Any]] = None
+
+    def resolve_interpret(self) -> bool:
+        """Pallas interpret flag: forced value, else off-TPU only."""
+        return (not _on_tpu()) if self.interpret is None else self.interpret
+
+    def resolve_b_tile(self, n: int) -> Optional[int]:
+        """The streamed-CSR slab size for an ``[n, n]`` matrix."""
+        if self.b_tile is not None:
+            return self.b_tile if self.b_tile < n else None
+        return choose_b_tile(n, self.hardware.vmem_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel: layout prep, launch, estimate, VMEM model."""
+
+    format: str                  # "csr" | "ell" | "bcsr" | "dia" | "grouped"
+    backend: str                 # "jax" | "pallas"
+    description: str
+    prepare: Callable[[Any, KernelContext], Any]
+    run: Callable[[Any, jnp.ndarray, KernelContext], jnp.ndarray]
+    estimate: Callable[[Any, int, KernelContext], "KernelRoofline"]
+    vmem_footprint: Callable[[int, int, KernelContext], int]
+    #: Specs producing identical prepared layouts share this key so
+    #: callers cache one layout for all of them (ELL's pallas pick lowers
+    #: to the CSR kernel and reuses its row-tile packing verbatim).
+    layout_key: Optional[str] = None
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        """The registry key, ``(format, backend)``."""
+        return (self.format, self.backend)
+
+    @property
+    def layout_cache_key(self) -> Tuple[str, str]:
+        """Cache identity of ``prepare``'s output, ``(layout, backend)``."""
+        return (self.layout_key or self.format, self.backend)
+
+    def bind(self, m, ctx: KernelContext) -> Callable[[jnp.ndarray],
+                                                      jnp.ndarray]:
+        """Prepare the layout for ``m`` once and return ``run(b) -> c``."""
+        layout = self.prepare(m, ctx)
+        return lambda b: self.run(layout, b, ctx)
+
+
+_REGISTRY: Dict[Tuple[str, str], KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    """Add ``spec`` under ``(spec.format, spec.backend)``; reject dupes."""
+    if spec.key in _REGISTRY:
+        raise ValueError(f"kernel {spec.key} already registered")
+    _REGISTRY[spec.key] = spec
+    return spec
+
+
+def get(format: str, backend: str) -> KernelSpec:
+    """Resolve the spec for ``(format, backend)``.
+
+    Raises:
+        KeyError: when the pair is unregistered; the message lists what is.
+    """
+    try:
+        return _REGISTRY[(format, backend)]
+    except KeyError:
+        raise KeyError(
+            f"no kernel registered for format={format!r} "
+            f"backend={backend!r}; available: {sorted(_REGISTRY)}") from None
+
+
+def specs() -> Tuple[KernelSpec, ...]:
+    """All registered specs, sorted by (format, backend)."""
+    return tuple(_REGISTRY[k] for k in sorted(_REGISTRY))
+
+
+def formats_for(backend: str) -> Tuple[str, ...]:
+    """Formats with a kernel registered under ``backend``."""
+    return tuple(sorted(f for f, b in _REGISTRY if b == backend))
+
+
+def feature_matrix() -> Dict[Tuple[str, str], str]:
+    """(format, backend) -> one-line description, for docs and tests."""
+    return {k: _REGISTRY[k].description for k in sorted(_REGISTRY)}
+
+
+def spmm(m, b: jnp.ndarray, *, format: str, backend: str = "jax",
+         ctx: Optional[KernelContext] = None) -> jnp.ndarray:
+    """One-call registry entry point: prepare + run in one shot.
+
+    For repeated execution against one matrix, use
+    ``repro.sparse.dispatch`` (cached layouts) or ``spec.bind``.
+    """
+    spec = get(format, backend)
+    return spec.bind(m, ctx or KernelContext())(b)
+
+
+# ------------------------------------------------------------------ #
+# Layout helpers (host-side, shared by specs and the ops compat layer)
+# ------------------------------------------------------------------ #
+
+def pad_empty_block_rows(a):
+    """Ensure every block row owns >= 1 block (zero block on the diagonal).
+
+    The Pallas kernel writes a C tile only when its block row is visited;
+    padding guarantees total coverage without in-kernel masking.
+    """
+    from repro.sparse.formats import BCSRMatrix
+    nb = a.nb
+    present = np.zeros(nb, dtype=bool)
+    rows_np = np.asarray(a.block_rows)
+    present[rows_np] = True
+    missing = np.nonzero(~present)[0].astype(np.int32)
+    if missing.size == 0:
+        return a
+    blocks = jnp.concatenate(
+        [a.blocks, jnp.zeros((missing.size, a.t, a.t), a.blocks.dtype)])
+    rows = np.concatenate([rows_np, missing])
+    cols = np.concatenate([np.asarray(a.block_cols), missing])
+    order = np.argsort(rows, kind="stable")
+    counts = np.bincount(rows, minlength=nb)
+    ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return BCSRMatrix(
+        blocks=blocks[jnp.asarray(order)],
+        block_rows=jnp.asarray(rows[order].astype(np.int32)),
+        block_cols=jnp.asarray(cols[order].astype(np.int32)),
+        block_ptr=jnp.asarray(ptr),
+        n=a.n, t=a.t, nnz=a.nnz,
+    )
+
+
+def band_to_blocks(dia_data: np.ndarray, offsets, *, n: int, t: int):
+    """Convert DIA storage to the banded kernel's block-band tensor.
+
+    Args:
+        dia_data: DIA values, [num_offsets, n] indexed by row.
+        offsets: diagonal offsets matching ``dia_data`` rows.
+        n: matrix dimension; t must divide n for the kernel grid.
+        t: block edge of the band tensor.
+
+    Returns:
+        ``(band, w)``: band tensor [nb, 2w+1, t, t] (nb = n / t) and the
+        block half-bandwidth w, as consumed by the banded kernel.
+    """
+    nb = (n + t - 1) // t
+    max_off = max(abs(int(o)) for o in offsets) if len(offsets) else 0
+    w = (max_off + t - 1) // t
+    band = np.zeros((nb, 2 * w + 1, t, t), dtype=np.asarray(dia_data).dtype)
+    dia = np.asarray(dia_data)
+    for oi, off in enumerate(offsets):
+        off = int(off)
+        for r in range(n):
+            c = r + off
+            if 0 <= c < n and dia[oi, r] != 0:
+                bi, bj = r // t, c // t
+                band[bi, bj - bi + w, r % t, c % t] = dia[oi, r]
+    return jnp.asarray(band), w
+
+
+# ------------------------------------------------------------------ #
+# Roofline estimates
+# ------------------------------------------------------------------ #
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoofline:
+    """Sparsity-aware placement of one kernel launch on a roofline."""
+
+    name: str
+    ai: float
+    useful_flops: float
+    mxu_flops: float
+    attainable_flops_per_s: float
+    mxu_utilization: float
+
+
+def csr_kernel_roofline(a, d: int, *, regime: str = "random",
+                        hw: HardwareSpec = TPU_V5E) -> KernelRoofline:
+    """Place a CSR kernel launch on the roofline under its regime model.
+
+    The CSR kernel issues exactly the useful FLOPs (padding slots multiply
+    zeros, a negligible <1/chunk overhead), so MXU utilization is reported
+    as 1.0; what varies with structure is the B-traffic term of the AI.
+    """
+    tb = sm.arithmetic_intensity(regime, a.n, a.nnz, d,
+                                 sizeof_val=a.data.dtype.itemsize)
+    return KernelRoofline(
+        name="csr_spmm", ai=tb.ai, useful_flops=tb.flops,
+        mxu_flops=tb.flops,
+        attainable_flops_per_s=hw.attainable(tb.ai),
+        mxu_utilization=1.0)
+
+
+def bcsr_kernel_roofline(a, d: int,
+                         hw: HardwareSpec = TPU_V5E) -> KernelRoofline:
+    """Apply the TPU blocked model (DESIGN.md Section 3) to a launch."""
+    tb = sm.ai_blocked_tpu(a.n, a.nnz, d, t=a.t, num_blocks=a.num_blocks,
+                           sizeof_val=a.blocks.dtype.itemsize)
+    util = sm.mxu_utilization(a.nnz, a.t, a.num_blocks)
+    return KernelRoofline(
+        name="bcsr_spmm", ai=tb.ai, useful_flops=tb.flops,
+        mxu_flops=2.0 * d * a.t * a.t * a.num_blocks,
+        attainable_flops_per_s=hw.attainable(tb.ai),
+        mxu_utilization=util)
+
+
+def dia_kernel_roofline(m, d: int,
+                        hw: HardwareSpec = TPU_V5E) -> KernelRoofline:
+    """Diagonal-regime placement: B streamed once, k full diagonals issued."""
+    k = max(int(np.unique(m.cols.astype(np.int64) - m.rows).shape[0]), 1)
+    tb = sm.arithmetic_intensity("diagonal", m.n, m.nnz, d)
+    return KernelRoofline(
+        name="banded_spmm", ai=tb.ai, useful_flops=tb.flops,
+        mxu_flops=2.0 * d * k * m.n,
+        attainable_flops_per_s=hw.attainable(tb.ai),
+        mxu_utilization=m.nnz / float(k * m.n))
+
+
+def grouped_matmul_roofline(T: int, K: int, N: int, E: int, *,
+                            itemsize: int = 2,
+                            hw: HardwareSpec = TPU_V5E) -> KernelRoofline:
+    """Block-diagonal case: every block dense => MXU utilization 1.0."""
+    flops = 2.0 * T * K * N
+    bytes_moved = itemsize * (T * K + E * K * N + T * N)
+    ai = flops / bytes_moved
+    return KernelRoofline(
+        name="grouped_matmul", ai=ai, useful_flops=flops, mxu_flops=flops,
+        attainable_flops_per_s=hw.attainable(ai), mxu_utilization=1.0)
+
+
+# ------------------------------------------------------------------ #
+# Spec implementations
+# ------------------------------------------------------------------ #
+
+def _convert(ctx: KernelContext, m, format: str):
+    """Convert ``m`` to ``format``'s container, honoring ``ctx.convert``
+    (the caller's conversion cache) when provided."""
+    if ctx.convert is not None:
+        return ctx.convert(m, format)
+    from repro.sparse import formats as fmt
+    if format == "csr":
+        return fmt.coo_to_csr(m)
+    if format == "ell":
+        return fmt.coo_to_ell(m)
+    if format == "bcsr":
+        return fmt.coo_to_bcsr(m, ctx.bcsr_block)
+    if format == "dia":
+        return fmt.coo_to_dia(m, max_offsets=ctx.max_dia_offsets)
+    raise ValueError(f"unknown format {format!r}")
+
+
+def _jax_prepare(format: str):
+    def prepare(m, ctx: KernelContext):
+        return _convert(ctx, m, format)
+    return prepare
+
+
+def _jax_run(format: str):
+    def run(layout, b, ctx: KernelContext):
+        # NB: any attribute-style import of repro.sparse.spmm grabs the
+        # dispatcher's spmm *function* exported by the package __init__,
+        # which shadows the submodule; go through importlib.
+        jax_spmm = importlib.import_module("repro.sparse.spmm")
+        return jax_spmm.IMPLEMENTATIONS[format](layout, b)
+    return run
+
+
+def _jax_estimate(format: str):
+    regime = {"csr": "random", "ell": "random", "dia": "diagonal"}
+
+    def estimate(m, d, ctx: KernelContext) -> KernelRoofline:
+        if format == "bcsr":
+            roof = _bcsr_estimate(m, d, ctx)
+            return dataclasses.replace(roof, name="bcsr_spmm_jax")
+        tb = sm.arithmetic_intensity(regime[format], m.n, m.nnz, d)
+        return KernelRoofline(
+            name=f"{format}_spmm_jax", ai=tb.ai, useful_flops=tb.flops,
+            mxu_flops=tb.flops,
+            attainable_flops_per_s=ctx.hardware.attainable(tb.ai),
+            mxu_utilization=1.0)
+    return estimate
+
+
+def _zero_footprint(n: int, d: int, ctx: KernelContext) -> int:
+    return 0
+
+
+for _f, _desc in (("csr", "gather + segment-sum (XLA)"),
+                  ("ell", "padded slot scan (XLA)"),
+                  ("bcsr", "batched dense-block einsum (XLA)"),
+                  ("dia", "static shifted axpy (XLA)")):
+    register(KernelSpec(
+        format=_f, backend="jax", description=_desc,
+        prepare=_jax_prepare(_f), run=_jax_run(_f),
+        estimate=_jax_estimate(_f), vmem_footprint=_zero_footprint))
+
+
+def _csr_pallas_prepare(m, ctx: KernelContext):
+    csr = _convert(ctx, m, "csr")
+    bt = ctx.resolve_b_tile(m.n)
+    tiles, slabs, cols, slots, vals = csr_to_row_tiles(
+        np.asarray(csr.indptr), np.asarray(csr.indices),
+        np.asarray(csr.data), n=csr.n, row_tile=ctx.row_tile,
+        chunk=ctx.chunk, b_tile=bt)
+    return {"n": csr.n, "b_tile": bt, "row_tile": ctx.row_tile,
+            "arrays": tuple(jnp.asarray(x)
+                            for x in (tiles, slabs, cols, slots, vals))}
+
+
+def _csr_pallas_run(layout, b, ctx: KernelContext):
+    tiles, slabs, cols, slots, vals = layout["arrays"]
+    return csr_spmm_pallas(
+        tiles, slabs, cols, slots, vals, b, n=layout["n"],
+        row_tile=layout["row_tile"], b_tile=layout["b_tile"],
+        block_d=pallas_block_d(b.shape[1]),
+        interpret=ctx.resolve_interpret())
+
+
+def _csr_pallas_estimate(m, d, ctx: KernelContext) -> KernelRoofline:
+    tb = sm.arithmetic_intensity("random", m.n, m.nnz, d)
+    return KernelRoofline(
+        name="csr_spmm", ai=tb.ai, useful_flops=tb.flops, mxu_flops=tb.flops,
+        attainable_flops_per_s=ctx.hardware.attainable(tb.ai),
+        mxu_utilization=1.0)
+
+
+def _csr_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
+    bd = min(512, pallas_block_d(d))
+    bt = ctx.resolve_b_tile(n) or n
+    # Resident: B slab + C tile + gathered chunk + cols/slots/vals chunks.
+    return 4 * (bt * bd + ctx.row_tile * bd + ctx.chunk * bd + 3 * ctx.chunk)
+
+
+for _f in ("csr", "ell"):
+    # ELL exists for VPU-style padding; the row-tiled CSR kernel already
+    # vectorizes on TPU, so ELL picks lower to it (layout_key="csr":
+    # both specs share one cached row-tile packing per matrix).
+    register(KernelSpec(
+        format=_f, backend="pallas",
+        description="row-tiled gather/segment-sum kernel, B streamed by "
+                    "VMEM-sized row slabs",
+        prepare=_csr_pallas_prepare, run=_csr_pallas_run,
+        estimate=_csr_pallas_estimate, vmem_footprint=_csr_pallas_footprint,
+        layout_key="csr"))
+
+
+def _bcsr_pallas_prepare(m, ctx: KernelContext):
+    return pad_empty_block_rows(_convert(ctx, m, "bcsr"))
+
+
+def _bcsr_pallas_run(layout, b, ctx: KernelContext):
+    return bcsr_spmm_pallas(
+        layout.blocks, layout.block_rows, layout.block_cols, b,
+        n=layout.n, t=layout.t, block_d=pallas_block_d(b.shape[1]),
+        interpret=ctx.resolve_interpret())
+
+
+def _bcsr_estimate(m, d, ctx: KernelContext) -> KernelRoofline:
+    from repro.core.classify import block_stats
+    t = ctx.bcsr_block
+    stats = block_stats(m, t)
+    N = max(int(stats["N"]), 1)
+    tb = sm.ai_blocked_tpu(m.n, m.nnz, d, t=t, num_blocks=N)
+    return KernelRoofline(
+        name="bcsr_spmm", ai=tb.ai, useful_flops=tb.flops,
+        mxu_flops=2.0 * d * t * t * N,
+        attainable_flops_per_s=ctx.hardware.attainable(tb.ai),
+        mxu_utilization=sm.mxu_utilization(m.nnz, t, N))
+
+
+def _bcsr_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
+    t, bd = ctx.bcsr_block, min(512, pallas_block_d(d))
+    return 4 * (t * t + 2 * t * bd)
+
+
+register(KernelSpec(
+    format="bcsr", backend="pallas",
+    description="dense-block MXU kernel (scalar-prefetch block walk)",
+    prepare=_bcsr_pallas_prepare, run=_bcsr_pallas_run,
+    estimate=_bcsr_estimate, vmem_footprint=_bcsr_pallas_footprint))
+
+
+def _dia_pallas_prepare(m, ctx: KernelContext):
+    dia = _convert(ctx, m, "dia")
+    t = pallas_band_tile(m.n)
+    band, w = band_to_blocks(np.asarray(dia.data), dia.offsets, n=m.n, t=t)
+    return {"band": band, "w": w, "t": t}
+
+
+def _dia_pallas_run(layout, b, ctx: KernelContext):
+    return banded_spmm_pallas(
+        layout["band"], b, t=layout["t"], w=layout["w"],
+        block_d=pallas_block_d(b.shape[1]),
+        interpret=ctx.resolve_interpret())
+
+
+def _dia_pallas_estimate(m, d, ctx: KernelContext) -> KernelRoofline:
+    return dia_kernel_roofline(m, d, hw=ctx.hardware)
+
+
+def _dia_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
+    t, bd = pallas_band_tile(n), min(512, pallas_block_d(d))
+    return 4 * (t * t + 2 * t * bd)
+
+
+register(KernelSpec(
+    format="dia", backend="pallas",
+    description="block-band kernel (B streamed once)",
+    prepare=_dia_pallas_prepare, run=_dia_pallas_run,
+    estimate=_dia_pallas_estimate, vmem_footprint=_dia_pallas_footprint))
+
+
+def _grouped_prepare(operand, ctx: KernelContext):
+    # Operand: (w[E, K, N], group_ids[T // bm], bm, bk, bn).
+    return operand
+
+
+def _grouped_run(layout, x, ctx: KernelContext):
+    w, group_ids, bm, bk, bn = layout
+    return grouped_matmul_pallas(x, w, group_ids, bm=bm, bk=bk, bn=bn,
+                                 interpret=ctx.resolve_interpret())
+
+
+def _grouped_estimate(operand, d, ctx: KernelContext) -> KernelRoofline:
+    w, group_ids, bm, _, _ = operand
+    E, K, N = w.shape
+    T = int(np.asarray(group_ids).shape[0]) * bm
+    return grouped_matmul_roofline(T, K, N, E, hw=ctx.hardware)
+
+
+def _grouped_footprint(n: int, d: int, ctx: KernelContext) -> int:
+    bm = bk = bn = 128
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+register(KernelSpec(
+    format="grouped", backend="pallas",
+    description="MoE expert FFN as block-diagonal grouped matmul",
+    prepare=_grouped_prepare, run=_grouped_run,
+    estimate=_grouped_estimate, vmem_footprint=_grouped_footprint))

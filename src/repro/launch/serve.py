@@ -13,6 +13,10 @@ side through the bound kernel (``docs/serving.md``):
     PYTHONPATH=src python -m repro.launch.serve --spmm-stream \
         --spmm-structure moe-block --spmm-n 4096 --spmm-d 64 \
         --spmm-steps 64
+
+``--calibrate`` runs the on-host compute-ceiling calibration
+(``repro.core.calibrate``) at startup and persists it, so the serving
+plan predicts from measured ``(peak_fraction, d_half)`` ceilings.
 """
 from __future__ import annotations
 
@@ -68,6 +72,31 @@ def build_stream_matrix(structure: str, n: int):
         raise ValueError(f"unknown structure {structure!r}; choose from "
                          f"{STREAM_STRUCTURES}")
     return suite[structure]()
+
+
+def run_startup_calibration() -> None:
+    """Calibrate the per-format compute ceilings for the serving host.
+
+    Runs the short ``repro.core.calibrate`` sweep against the hardware
+    spec the default dispatcher resolves to, persists the result to the
+    default :class:`~repro.core.calibrate.CalibrationStore`, and
+    refreshes the dispatcher so every subsequent plan (including the
+    ``--spmm-stream`` serving plan) predicts from measured ceilings
+    (``ceiling_source="calibrated"``) instead of the baked-in defaults.
+    """
+    from repro import sparse
+    from repro.core.calibrate import CalibrationStore, calibrate
+
+    disp = sparse.default_dispatcher()
+    backend = disp._resolve_backend()
+    hw = disp._resolve_hardware(backend)
+    t0 = time.perf_counter()
+    store = CalibrationStore()
+    cal = calibrate(hw, backend=backend, store=store)
+    disp.refresh_calibration()
+    print(f"startup calibration ({backend} kernels on {hw.name}) took "
+          f"{time.perf_counter() - t0:.1f}s -> {store.path_for(hw, backend)}")
+    print(cal.summary())
 
 
 def serve_spmm_stream(args) -> None:
@@ -156,8 +185,14 @@ def main():
                     help="requests to serve = the plan's reuse horizon")
     ap.add_argument("--spmm-compare", action="store_true",
                     help="also time per-call dispatch of the same stream")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the on-host ceiling calibration at startup; "
+                         "the serving plan then predicts from measured "
+                         "(peak_fraction, d_half) instead of defaults")
     args = ap.parse_args()
 
+    if args.calibrate:
+        run_startup_calibration()
     if args.spmm_stream:
         serve_spmm_stream(args)
         return

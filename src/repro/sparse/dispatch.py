@@ -44,12 +44,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.calibrate import CalibrationStore
 from repro.core.classify import StructureReport, block_stats, classify
 from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec
+from repro.core.roofline import ComputeCeiling
 from repro.core import sparsity_models as sm
 from repro.core.patterns import COOMatrix
 from repro.sparse import formats as fmt
-from repro.sparse import spmm as jax_spmm
 
 FORMATS: Tuple[str, ...] = ("csr", "ell", "bcsr", "dia")
 STRATEGIES: Tuple[str, ...] = ("auto",) + FORMATS
@@ -60,10 +61,12 @@ STRATEGIES: Tuple[str, ...] = ("auto",) + FORMATS
 #: work is amortized over the d dense columns, so throughput saturates
 #: with growing d at a format-specific rate — CSR's scalar segment-sum has
 #: the largest per-nonzero overhead (d_half ~ 100), DIA's streaming axpy
-#: almost none (d_half ~ 3).  Calibrated against this container's XLA-CPU
-#: suite measurements (within ~10% across formats x matrices x d); on real
-#: accelerators the bandwidth term ``beta * AI`` binds first and these
-#: ceilings barely matter.  Override via ``Dispatcher(efficiency=...)``.
+#: almost none (d_half ~ 3).  These are the *fallback* constants, once
+#: measured on one reference container; ``repro.core.calibrate`` fits
+#: host-specific replacements and the dispatcher prefers a persisted
+#: calibration whenever one matches the active HardwareSpec fingerprint
+#: (each candidate records its provenance in ``ceiling_source``).
+#: Override per dispatcher via ``Dispatcher(efficiency=...)``.
 DEFAULT_EFFICIENCY: Dict[str, Tuple[float, float]] = {
     "csr": (0.030, 112.0),
     "ell": (0.040, 8.0),
@@ -85,6 +88,8 @@ class CandidateEval:
     amortized_gflops: Optional[float]     # incl. conversion / reuse
     conversion_bytes: Optional[float]
     params: dict = dataclasses.field(default_factory=dict)
+    #: Compute-ceiling provenance: "default" | "calibrated" | "override".
+    ceiling_source: str = "default"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +110,11 @@ class DispatchPlan:
         """format -> reason, for every policy-rejected candidate."""
         return {c.format: c.skip_reason for c in self.candidates
                 if not c.eligible}
+
+    @property
+    def ceiling_sources(self) -> Dict[str, str]:
+        """format -> compute-ceiling provenance (default/calibrated/override)."""
+        return {c.format: c.ceiling_source for c in self.candidates}
 
     def candidate(self, name: str) -> CandidateEval:
         """Return the :class:`CandidateEval` for format ``name``.
@@ -132,7 +142,8 @@ class DispatchPlan:
             mark = "*" if c.format == self.chosen else " "
             if c.predicted_gflops is not None:
                 perf = (f"AI={c.ai:6.3f}  pred={c.predicted_gflops:7.2f}"
-                        f"  amort={c.amortized_gflops:7.2f} GF/s")
+                        f"  amort={c.amortized_gflops:7.2f} GF/s"
+                        f" [{c.ceiling_source}]")
             else:
                 perf = "(not modeled)"
             tail = "" if c.eligible else f"  SKIP: {c.skip_reason}"
@@ -147,22 +158,6 @@ def _degree_stats(m: COOMatrix) -> Tuple[float, int]:
 
 def _num_diagonals(m: COOMatrix) -> int:
     return int(np.unique(m.cols.astype(np.int64) - m.rows).shape[0])
-
-
-def _pallas_band_tile(n: int) -> int:
-    """Largest MXU-friendly tile edge dividing n (banded Pallas kernel)."""
-    for t in (128, 64, 32, 16, 8, 4, 2):
-        if n % t == 0:
-            return t
-    return 1
-
-
-def _pallas_block_d(d: int) -> int:
-    """Largest d-tile (<= 512) dividing d; the kernels require d % bd == 0."""
-    for bd in (512, 256, 128, 64, 32, 16, 8, 4, 2):
-        if d % bd == 0:
-            return bd
-    return 1
 
 
 def _evict_cb(dispatcher_ref: "weakref.ref", key: int) -> None:
@@ -188,6 +183,7 @@ class Dispatcher:
                  bcsr_block: int = 64, max_dia_offsets: int = 64,
                  bcsr_max_inflation: float = 64.0,
                  efficiency: Optional[Dict[str, Tuple[float, float]]] = None,
+                 calibration=None,
                  sizeof_val: int = 4, sizeof_idx: int = 4):
         if backend not in ("auto", "jax", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -198,6 +194,15 @@ class Dispatcher:
         self.max_dia_offsets = max_dia_offsets
         self.bcsr_max_inflation = bcsr_max_inflation
         self.efficiency = dict(DEFAULT_EFFICIENCY, **(efficiency or {}))
+        #: Formats whose ceiling was pinned by the caller: calibration
+        #: never overrides an explicit ``efficiency=`` entry.
+        self._overridden = frozenset(efficiency or ())
+        #: ``None`` = the default CalibrationStore (resolved lazily so
+        #: ``$REPRO_CALIBRATION_DIR`` is honored at first use, not at
+        #: import); a ``CalibrationStore`` to use explicitly; ``False``
+        #: disables calibration lookup (the calibrator itself does this).
+        self.calibration = calibration
+        self._cal_cache: Dict[str, Dict[str, Tuple[float, float]]] = {}
         self.sizeof_val = sizeof_val
         self.sizeof_idx = sizeof_idx
         self._plans: Dict[tuple, DispatchPlan] = {}
@@ -249,6 +254,46 @@ class Dispatcher:
     # ----------------------------------------------------------------- #
     # Modeling
     # ----------------------------------------------------------------- #
+
+    def _calibrated(self, hw: HardwareSpec,
+                    backend: str) -> Dict[str, Tuple[float, float]]:
+        """The persisted calibration for ``(hw, backend)`` ({} if absent).
+
+        The backend is part of the key: jax and pallas ceilings describe
+        different kernel implementations, so a calibration fitted for one
+        must never answer for the other.
+        """
+        if self.calibration is False:
+            return {}
+        key = (hw.fingerprint(), backend)
+        if key not in self._cal_cache:
+            store = self.calibration or CalibrationStore()
+            cal = store.load(hw, backend)
+            self._cal_cache[key] = cal.efficiency() if cal else {}
+        return self._cal_cache[key]
+
+    def refresh_calibration(self) -> None:
+        """Drop cached calibration lookups and plans (e.g. after a new
+        ``repro.core.calibrate.calibrate(..., store=...)`` run)."""
+        self._cal_cache.clear()
+        self._plans.clear()
+
+    def _ceiling(self, format: str, hw: HardwareSpec,
+                 backend: str) -> ComputeCeiling:
+        """Resolve the compute ceiling with provenance.
+
+        Order: an explicit ``efficiency=`` entry from the constructor
+        ("override") > a persisted on-host calibration matching the
+        HardwareSpec fingerprint and resolved backend ("calibrated") >
+        the baked-in ``DEFAULT_EFFICIENCY`` constants ("default").
+        """
+        if format in self._overridden:
+            return ComputeCeiling(*self.efficiency[format],
+                                  source="override")
+        calibrated = self._calibrated(hw, backend)
+        if format in calibrated:
+            return ComputeCeiling(*calibrated[format], source="calibrated")
+        return ComputeCeiling(*self.efficiency[format], source="default")
 
     def _resolve_backend(self) -> str:
         if self.backend != "auto":
@@ -311,9 +356,10 @@ class Dispatcher:
         raise ValueError(f"unknown format {format!r}")
 
     def _model(self, m: COOMatrix, report: StructureReport, format: str,
-               params: dict, d: int, hw: HardwareSpec,
-               reuse: int) -> Tuple[float, float, float, float, float]:
-        """(ai, useful_fraction, predicted, amortized, conversion_bytes).
+               params: dict, d: int, hw: HardwareSpec, reuse: int,
+               backend: str
+               ) -> Tuple[float, float, float, float, float, str]:
+        """(ai, useful_fraction, predicted, amortized, conv_bytes, source).
 
         AI composes structure and storage: the B-traffic term comes from
         the detected regime's Section III model (structure controls B
@@ -356,16 +402,16 @@ class Dispatcher:
 
         ai = flops / (bytes_a + bytes_b + bytes_c)
         bandwidth_roof = hw.hbm_bandwidth * ai
-        peak_fraction, d_half = self.efficiency[format]
-        compute_roof = (hw.peak_flops * peak_fraction * useful
-                        * d / (d + d_half))
+        ceiling = self._ceiling(format, hw, backend)
+        compute_roof = ceiling.attainable(hw.peak_flops, useful, d)
         predicted = min(bandwidth_roof, compute_roof)
         if flops <= 0 or predicted <= 0:   # empty matrix: nothing to do
-            return ai, useful, 0.0, 0.0, conv
+            return ai, useful, 0.0, 0.0, conv, ceiling.source
         t_spmm = flops / predicted
         t_conv = 2.0 * conv / hw.hbm_bandwidth          # read COO + write
         amortized = flops / (t_spmm + t_conv / max(reuse, 1))
-        return ai, useful, predicted / 1e9, amortized / 1e9, conv
+        return (ai, useful, predicted / 1e9, amortized / 1e9, conv,
+                ceiling.source)
 
     # ----------------------------------------------------------------- #
     # Public API
@@ -410,16 +456,17 @@ class Dispatcher:
         cands = []
         for f in FORMATS:
             eligible, reason, params = self._policy(m, report, f)
+            source = "default"
             try:
-                ai, useful, pred, amort, conv = self._model(
-                    m, report, f, params, d, hw, reuse)
+                ai, useful, pred, amort, conv, source = self._model(
+                    m, report, f, params, d, hw, reuse, backend)
             except (KeyError, ValueError):
                 ai = useful = pred = amort = conv = None
             cands.append(CandidateEval(
                 format=f, eligible=eligible, skip_reason=reason, ai=ai,
                 useful_fraction=useful, predicted_gflops=pred,
                 amortized_gflops=amort, conversion_bytes=conv,
-                params=params))
+                params=params, ceiling_source=source))
 
         if strategy == "auto":
             viable = [c for c in cands
@@ -487,58 +534,23 @@ class Dispatcher:
             (any ``d`` — the kernel tile width adapts per call), ``c`` is
             ``[n, d]``.
         """
-        f = plan.chosen
-        if plan.backend == "jax":
-            mat = self.convert(m, f)
-            impl = jax_spmm.IMPLEMENTATIONS[f]
-            return lambda b: impl(mat, b)
-        # Pallas path.  Packed layouts are cached per matrix like the
-        # format containers — per-call packing would dominate the kernel.
-        # ELL exists for VPU-style padding; the row-tiled CSR kernel
-        # already vectorizes on TPU, so ELL lowers to it.
-        from repro import kernels
-        from repro.kernels.csr_spmm import csr_spmm_pallas, csr_to_row_tiles
-        key = self._track(m)
-        n = m.n
-        interpret = jax.default_backend() != "tpu"
-        if f in ("csr", "ell"):
-            ck = (key, "pallas_csr_tiles", self.bcsr_block)
-            if ck not in self._converted:
-                csr = self.convert(m, "csr")
-                tiles, cols, slots, vals = csr_to_row_tiles(
-                    np.asarray(csr.indptr), np.asarray(csr.indices),
-                    np.asarray(csr.data), n=csr.n)
-                self._converted[ck] = tuple(
-                    jnp.asarray(x) for x in (tiles, cols, slots, vals))
-            tiles, cols, slots, vals = self._converted[ck]
-            return lambda b: csr_spmm_pallas(
-                tiles, cols, slots, vals, b, n=n,
-                block_d=_pallas_block_d(b.shape[1]), interpret=interpret)
-        if f == "bcsr":
-            from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
-            ck = (key, "pallas_bcsr_padded", self.bcsr_block)
-            if ck not in self._converted:
-                self._converted[ck] = kernels.pad_empty_block_rows(
-                    self.convert(m, "bcsr"))
-            padded = self._converted[ck]
-            # Call the kernel directly: the ops.bcsr_spmm wrapper re-runs
-            # the (idempotent, host-side) empty-row padding per call.
-            return lambda b: bcsr_spmm_pallas(
-                padded.blocks, padded.block_rows, padded.block_cols, b,
-                n=padded.n, t=padded.t,
-                block_d=_pallas_block_d(b.shape[1]), interpret=interpret)
-        if f == "dia":
-            ck = (key, "pallas_band", self.bcsr_block)
-            if ck not in self._converted:
-                dia = self.convert(m, "dia")
-                t = _pallas_band_tile(n)
-                band, w = kernels.band_to_blocks(
-                    np.asarray(dia.data), dia.offsets, n=n, t=t)
-                self._converted[ck] = (band, w, t)
-            band, w, t = self._converted[ck]
-            return lambda b: kernels.banded_spmm(
-                band, b, t=t, w=w, block_d=_pallas_block_d(b.shape[1]))
-        raise ValueError(f"unknown format {f!r}")
+        # Uniform path: resolve the KernelSpec for (format, backend) and
+        # cache its prepared layout per matrix — per-call packing would
+        # dominate the kernel.  (Lazy import: repro.kernels imports this
+        # package for its format containers.)
+        from repro.kernels import registry
+        spec = registry.get(plan.chosen, plan.backend)
+        ctx = registry.KernelContext(
+            hardware=self._resolve_hardware(plan.backend),
+            bcsr_block=self.bcsr_block,
+            max_dia_offsets=self.max_dia_offsets,
+            convert=self.convert)   # prepare shares the conversion cache
+        ck = (self._track(m), "layout", *spec.layout_cache_key,
+              self.bcsr_block)
+        if ck not in self._converted:
+            self._converted[ck] = spec.prepare(m, ctx)
+        layout = self._converted[ck]
+        return lambda b: spec.run(layout, b, ctx)
 
 
 #: Module-level dispatcher behind the one-call public API.

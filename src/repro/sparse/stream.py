@@ -31,6 +31,7 @@ Two things distinguish this from calling ``sparse.spmm`` per batch:
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Iterable, Optional, Sequence, Union
 
 import jax.numpy as jnp
@@ -38,6 +39,13 @@ import numpy as np
 
 from repro.core.patterns import COOMatrix
 from repro.sparse import dispatch as _dispatch
+
+_LOG = logging.getLogger(__name__)
+
+#: ``execute_many`` warns when realized reuse exceeds the planned horizon
+#: by more than this factor (the conversion-amortization model was fed a
+#: horizon off by >2x, so the format choice may be stale).
+REUSE_DRIFT_FACTOR = 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +124,8 @@ class StreamPlan:
             strategy: ``"auto"`` or a forced format name.
         """
         self._m = m
+        self._dispatcher = dispatcher
+        self._strategy = strategy
         self.spec = spec
         self.dispatch = dispatcher.plan(m, spec.d, strategy=strategy,
                                         reuse=spec.reuse)
@@ -125,6 +135,7 @@ class StreamPlan:
         # warm up with one batch, as launch/serve.py does.)
         self._run = dispatcher.executor(m, self.dispatch)
         self.executed = 0
+        self._reuse_warned = False
 
     @property
     def n(self) -> int:
@@ -159,6 +170,7 @@ class StreamPlan:
         self._check(b, width=self.spec.d)
         out = self._run(b)
         self.executed += 1          # count only replays that succeeded
+        self._audit_reuse()
         return out
 
     def execute_many(self, bs: Union[jnp.ndarray, Sequence[jnp.ndarray],
@@ -181,9 +193,55 @@ class StreamPlan:
             self._check(b, width=self.spec.d)
             outs.append(self._run(b))
             self.executed += 1
+        self._audit_reuse()
         if not outs:
             return jnp.zeros((0, self.n, self.spec.d), dtype=self.spec.dtype)
         return jnp.stack(outs)
+
+    def _audit_reuse(self) -> None:
+        """Warn (once) when the realized reuse drifts >2x past the plan.
+
+        The reuse horizon is an input to the conversion-amortization
+        model; when the stream outlives it by more than
+        ``REUSE_DRIFT_FACTOR``, the format choice may no longer be the
+        amortized-best one — :meth:`replan` re-evaluates at the observed
+        horizon (ROADMAP streamed-dispatch follow-up, minimal version).
+        """
+        if self._reuse_warned:
+            return
+        if self.executed > REUSE_DRIFT_FACTOR * self.spec.reuse:
+            self._reuse_warned = True
+            _LOG.warning(
+                "StreamPlan reuse horizon off by >%.0fx: planned %d, "
+                "executed %d (utilization %.1fx); the conversion "
+                "amortization that picked %r assumed the shorter stream — "
+                "consider plan.replan(observed_reuse=%d)",
+                REUSE_DRIFT_FACTOR, self.spec.reuse, self.executed,
+                self.executed / self.spec.reuse, self.chosen, self.executed)
+
+    def replan(self, observed_reuse: int) -> "StreamPlan":
+        """Re-plan at an observed reuse horizon; returns a new StreamPlan.
+
+        Runs the dispatcher's amortized roofline again with
+        ``reuse=observed_reuse`` — the chosen format can flip (e.g. to an
+        expensive-to-build but faster-steady-state one once the horizon
+        justifies its conversion).  Cheap when the format does not change:
+        the dispatcher's conversion and layout caches are already warm for
+        this matrix.
+
+        Args:
+            observed_reuse: the realized (or newly expected) number of
+                executions, e.g. ``plan.executed``.
+
+        Returns:
+            A fresh bound :class:`StreamPlan`; this plan stays valid.
+        """
+        if observed_reuse < 1:
+            raise ValueError(
+                f"observed_reuse must be >= 1, got {observed_reuse}")
+        spec = dataclasses.replace(self.spec, reuse=observed_reuse)
+        return StreamPlan(self._dispatcher, self._m, spec,
+                          strategy=self._strategy)
 
     def execute_wide(self, b: jnp.ndarray,
                      *, block_d: Optional[int] = None) -> jnp.ndarray:
@@ -214,6 +272,7 @@ class StreamPlan:
         for lo in range(0, total, block_d):
             outs.append(self._run(b[:, lo:lo + block_d]))
             self.executed += 1
+        self._audit_reuse()
         return jnp.concatenate(outs, axis=1)
 
     def reset_stats(self) -> None:
@@ -226,9 +285,11 @@ class StreamPlan:
 
         Returns:
             Dict with ``chosen``, ``regime``, ``backend``, ``planned_reuse``,
-            ``executed``, and ``reuse_utilization`` (executed / planned —
+            ``executed``, ``reuse_utilization`` (executed / planned —
             below 1.0 means the conversion cost was amortized over fewer
-            calls than the model assumed).
+            calls than the model assumed), and ``replan_suggested`` (the
+            horizon drifted past ``REUSE_DRIFT_FACTOR``; see
+            :meth:`replan`).
         """
         return {
             "chosen": self.dispatch.chosen,
@@ -237,6 +298,7 @@ class StreamPlan:
             "planned_reuse": self.spec.reuse,
             "executed": self.executed,
             "reuse_utilization": self.executed / self.spec.reuse,
+            "replan_suggested": self._reuse_warned,
         }
 
 

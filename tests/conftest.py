@@ -1,9 +1,16 @@
 """Test bootstrap: make ``repro`` (src layout) and ``benchmarks``
-importable regardless of how pytest is invoked."""
+importable regardless of how pytest is invoked, and isolate the
+calibration store so dispatch predictions never depend on whatever
+``~/.cache/repro/calibrations`` happens to hold on the host."""
+import os
 import sys
+import tempfile
 from pathlib import Path
 
 _ROOT = Path(__file__).resolve().parent.parent
 for _p in (str(_ROOT), str(_ROOT / "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
+
+os.environ["REPRO_CALIBRATION_DIR"] = tempfile.mkdtemp(
+    prefix="repro-cal-test-")

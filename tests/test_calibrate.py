@@ -1,0 +1,239 @@
+"""On-host ceiling calibration: fit, store round-trip, dispatcher pickup."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.core import banded, blocked, erdos_renyi
+from repro.core.calibrate import (
+    Calibration, CalibrationStore, FormatCalibration, calibrate,
+    fit_ceiling,
+)
+from repro.core.hardware import HOST_CPU, TPU_V5E
+from repro.core.roofline import ComputeCeiling
+
+N = 512
+
+
+# --------------------------------------------------------------------- #
+# The fit.
+# --------------------------------------------------------------------- #
+
+def test_fit_ceiling_recovers_synthetic_params():
+    d = np.array([2, 8, 32, 128, 512])
+    g_inf, d_half = 80.0, 24.0
+    g = g_inf * d / (d + d_half)
+    fit_g, fit_dh = fit_ceiling(d, g)
+    assert fit_g == pytest.approx(g_inf, rel=1e-6)
+    assert fit_dh == pytest.approx(d_half, rel=1e-6)
+
+
+def test_fit_ceiling_degenerate_sweeps():
+    # Flat throughput: no saturation info -> asymptote = max, d_half = 0.
+    g, dh = fit_ceiling([4, 16, 64], [5.0, 5.0, 5.0])
+    assert g == pytest.approx(5.0) and dh == pytest.approx(0.0, abs=1e-9)
+    # Decreasing with d (anti-model): fall back, don't extrapolate.
+    g, dh = fit_ceiling([4, 16, 64], [10.0, 6.0, 2.0])
+    assert g == pytest.approx(10.0) and dh == 0.0
+    # Non-positive measurement: degenerate fallback, never a crash.
+    g, dh = fit_ceiling([4, 16], [0.0, 1.0])
+    assert g > 0 and dh == 0.0
+    with pytest.raises(ValueError):
+        fit_ceiling([4], [1.0])
+
+
+def test_compute_ceiling_shape():
+    c = ComputeCeiling(peak_fraction=0.5, d_half=16.0, source="calibrated")
+    peak = 100e9
+    # Half-saturation at d = d_half, asymptote at large d.
+    assert c.attainable(peak, 1.0, 16) == pytest.approx(0.25 * peak)
+    assert c.attainable(peak, 1.0, 10_000_000) == pytest.approx(
+        0.5 * peak, rel=1e-3)
+    assert c.attainable(peak, 0.5, 10_000_000) == pytest.approx(
+        0.25 * peak, rel=1e-3)
+
+
+# --------------------------------------------------------------------- #
+# Store round-trip + fingerprint gating.
+# --------------------------------------------------------------------- #
+
+def _fake_calibration(hw, fmt="csr"):
+    return Calibration(
+        hardware=hw.name, fingerprint=hw.fingerprint(), backend="jax",
+        entries=(FormatCalibration(
+            format=fmt, backend="jax", peak_fraction=0.123, d_half=7.0,
+            sustained_gflops=1.5, useful_fraction=1.0,
+            measured={4: 0.5, 64: 1.4}),))
+
+
+def test_store_round_trip(tmp_path):
+    store = CalibrationStore(root=tmp_path)
+    cal = _fake_calibration(HOST_CPU)
+    path = store.save(cal)
+    assert path == store.path_for(HOST_CPU) and path.is_file()
+    loaded = store.load(HOST_CPU)
+    assert loaded is not None
+    assert loaded.efficiency() == {"csr": (0.123, 7.0)}
+    assert loaded.entries[0].measured == {4: 0.5, 64: 1.4}
+    assert loaded.fingerprint == HOST_CPU.fingerprint()
+
+
+def test_store_fingerprint_mismatch_falls_back(tmp_path):
+    store = CalibrationStore(root=tmp_path)
+    store.save(_fake_calibration(HOST_CPU))
+    # Same name, different compute identity: the stored calibration must
+    # not be applied.
+    changed = dataclasses.replace(HOST_CPU, peak_flops=HOST_CPU.peak_flops * 2)
+    assert changed.fingerprint() != HOST_CPU.fingerprint()
+    assert store.load(changed) is None
+    # Bandwidth substitution (the STREAM-measured beta) must NOT
+    # invalidate a calibration: ceilings are compute-side.
+    rebw = dataclasses.replace(HOST_CPU, hbm_bandwidth=123e9)
+    assert rebw.fingerprint() == HOST_CPU.fingerprint()
+    assert store.load(rebw) is not None
+
+
+def test_store_keys_by_backend(tmp_path):
+    """jax and pallas calibrations for one host must not cross-answer:
+    different files, and load() rejects a backend mismatch."""
+    store = CalibrationStore(root=tmp_path)
+    jax_cal = _fake_calibration(HOST_CPU)
+    pallas_cal = dataclasses.replace(jax_cal, backend="pallas")
+    p1 = store.save(jax_cal)
+    p2 = store.save(pallas_cal)
+    assert p1 != p2                              # no silent overwrite
+    assert store.load(HOST_CPU, "jax").backend == "jax"
+    assert store.load(HOST_CPU, "pallas").backend == "pallas"
+    # A dispatcher resolving to jax must not see pallas-only ceilings.
+    p2.unlink()
+    p1.rename(store.path_for(HOST_CPU, "pallas"))   # mislabeled file
+    assert store.load(HOST_CPU, "pallas") is None   # backend field wins
+
+
+def test_dispatcher_ignores_other_backend_calibration(tmp_path):
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+    store = CalibrationStore(root=tmp_path)
+    store.save(dataclasses.replace(_fake_calibration(hw),
+                                   backend="pallas"))
+    # Off-TPU the dispatcher resolves backend="jax": the pallas-fitted
+    # ceilings must not be applied.
+    disp = sparse.Dispatcher(hardware=hw, calibration=store)
+    plan = disp.plan(erdos_renyi(N, 8, seed=1), 8)
+    assert set(plan.ceiling_sources.values()) == {"default"}
+    disp_p = sparse.Dispatcher(hardware=hw, backend="pallas",
+                               calibration=store)
+    assert disp_p.plan(erdos_renyi(N, 8, seed=2), 8) \
+        .ceiling_sources["csr"] == "calibrated"
+
+
+def test_store_tolerates_absent_and_corrupt_files(tmp_path):
+    store = CalibrationStore(root=tmp_path / "nowhere")
+    assert store.load(HOST_CPU) is None
+    store2 = CalibrationStore(root=tmp_path)
+    store2.root.mkdir(exist_ok=True)
+    store2.path_for(HOST_CPU).write_text("{not json")
+    assert store2.load(HOST_CPU) is None
+
+
+def test_fingerprint_distinguishes_specs():
+    assert HOST_CPU.fingerprint() != TPU_V5E.fingerprint()
+    assert len(HOST_CPU.fingerprint()) == 12
+    assert HOST_CPU.fingerprint() == HOST_CPU.fingerprint()
+
+
+# --------------------------------------------------------------------- #
+# Dispatcher pickup: calibrated vs default vs override provenance.
+# --------------------------------------------------------------------- #
+
+def _mats():
+    return {
+        "random": erdos_renyi(N, 8, seed=1),
+        "banded": banded(N, 3, fill=0.9, seed=2),
+        "fem": blocked(N, t=32, num_blocks=N // 16, nnz_per_block=320,
+                       seed=3),
+    }
+
+
+def test_dispatcher_uses_calibrated_ceilings(tmp_path):
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+    store = CalibrationStore(root=tmp_path)
+    cal = Calibration(
+        hardware=hw.name, fingerprint=hw.fingerprint(), backend="jax",
+        entries=tuple(FormatCalibration(
+            format=f, backend="jax", peak_fraction=0.2, d_half=10.0,
+            sustained_gflops=1.0, useful_fraction=1.0, measured={})
+            for f in sparse.FORMATS))
+    store.save(cal)
+    m = _mats()["fem"]
+    d = 16
+    disp = sparse.Dispatcher(hardware=hw, calibration=store)
+    plan = disp.plan(m, d)
+    assert set(plan.ceiling_sources.values()) == {"calibrated"}
+    # The prediction must equal the model evaluated with the calibrated
+    # pair: min(beta * AI, peak * 0.2 * useful * d / (d + 10)).
+    cand = plan.candidate("csr")
+    expect = min(hw.hbm_bandwidth * cand.ai,
+                 hw.peak_flops * 0.2 * cand.useful_fraction * d / (d + 10.0))
+    assert cand.predicted_gflops == pytest.approx(expect / 1e9, rel=1e-6)
+    # Same matrix, no calibration on disk -> defaults, different numbers.
+    disp_def = sparse.Dispatcher(
+        hardware=hw, calibration=CalibrationStore(root=tmp_path / "empty"))
+    plan_def = disp_def.plan(m, d)
+    assert set(plan_def.ceiling_sources.values()) == {"default"}
+    assert plan_def.candidate("csr").predicted_gflops != \
+        cand.predicted_gflops
+
+
+def test_override_beats_calibration_and_refresh(tmp_path):
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+    store = CalibrationStore(root=tmp_path)
+    m = _mats()["random"]
+    disp = sparse.Dispatcher(hardware=hw, calibration=store,
+                             efficiency={"csr": (0.5, 1.0)})
+    plan = disp.plan(m, 8)
+    assert plan.ceiling_sources["csr"] == "override"
+    assert plan.ceiling_sources["ell"] == "default"   # nothing stored yet
+    store.save(_fake_calibration(hw, fmt="ell"))
+    disp.refresh_calibration()                         # drop caches
+    plan2 = disp.plan(m, 8)
+    assert plan2.ceiling_sources["ell"] == "calibrated"
+    assert plan2.ceiling_sources["csr"] == "override"  # still pinned
+    assert plan2.summary().count("[override]") == 1
+
+
+def test_calibration_disabled_sentinel(tmp_path):
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+    store = CalibrationStore(root=tmp_path)
+    store.save(_fake_calibration(hw))
+    disp = sparse.Dispatcher(hardware=hw, calibration=False)
+    assert set(disp.plan(_mats()["random"], 8)
+               .ceiling_sources.values()) == {"default"}
+
+
+# --------------------------------------------------------------------- #
+# The measured sweep end-to-end (tiny scale).
+# --------------------------------------------------------------------- #
+
+def test_calibrate_end_to_end(tmp_path):
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+    store = CalibrationStore(root=tmp_path)
+    cal = calibrate(hw, backend="jax", scale=7, repeats=1,
+                    d_values=(4, 16, 64), bcsr_block=16, store=store)
+    assert {e.format for e in cal.entries} == set(sparse.FORMATS)
+    for e in cal.entries:
+        assert 1e-5 <= e.peak_fraction <= 1.0
+        assert 0.0 <= e.d_half <= 4096.0
+        assert set(e.measured) == {4, 16, 64}
+        assert all(v > 0 for v in e.measured.values())
+    # Persisted and valid JSON keyed by the spec fingerprint.
+    payload = json.loads(store.path_for(hw).read_text())
+    assert payload["fingerprint"] == hw.fingerprint()
+    # A dispatcher on the same hardware now predicts from it.
+    disp = sparse.Dispatcher(hardware=hw, calibration=store)
+    plan = disp.plan(_mats()["banded"], 16)
+    assert set(plan.ceiling_sources.values()) == {"calibrated"}
+    with pytest.raises(ValueError):
+        calibrate(hw, formats=["nope"], scale=6)

@@ -144,6 +144,23 @@ def test_plan_and_conversion_cached():
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
 
 
+def test_pallas_layouts_shared_between_csr_and_ell():
+    """ELL's pallas pick lowers to the CSR kernel; the row-tile packing
+    must be prepared once (shared layout_key) and prepare must reuse the
+    dispatcher's conversion cache rather than re-converting."""
+    disp = sparse.Dispatcher(backend="pallas", bcsr_block=32)
+    m = _mats()["random"]
+    b = _b(N, 8)
+    csr_container = disp.convert(m, "csr")
+    out_csr = disp.spmm(m, b, strategy="csr")
+    out_ell = disp.spmm(m, b, strategy="ell")
+    np.testing.assert_allclose(np.asarray(out_csr), np.asarray(out_ell),
+                               rtol=1e-6, atol=1e-6)
+    layouts = [k for k in disp._converted if len(k) > 2 and k[1] == "layout"]
+    assert len(layouts) == 1                     # one shared packing
+    assert disp.convert(m, "csr") is csr_container   # cache, not rebuilt
+
+
 def test_cache_evicts_on_gc():
     disp = sparse.Dispatcher()
     m = erdos_renyi(N, 4, seed=9)

@@ -74,14 +74,53 @@ def test_link_checker_catches_breaks(tmp_path):
     cl = _load_check_links()
     (tmp_path / "a file.md").write_text("here")
     md = tmp_path / "x.md"
-    md.write_text("ok [a](https://example.com) [b](#frag)\n"
+    md.write_text("# Frag\n"
+                  "ok [a](https://example.com) [b](#frag)\n"
                   "bad [c](missing.md) img ![d](gone.png)\n"
                   "spaces ok [e](a file.md) [f](a%20file.md)\n"
                   "spaces bad [g](no such.md)\n")
     broken = cl.broken_links(md, tmp_path)
     assert [t for _, t in broken] == ["missing.md", "gone.png",
                                       "no such.md"]
-    assert broken[0][0] == 2
+    assert broken[0][0] == 3
+    assert cl.main([str(md)]) == 1
+
+
+# --------------------------------------------------------------------- #
+# Anchor fragments: GitHub-style heading slugs (ROADMAP item).
+# --------------------------------------------------------------------- #
+
+def test_heading_slugs_match_github_rules():
+    cl = _load_check_links()
+    assert cl.slugify("Install") == "install"
+    assert cl.slugify("The `plan`/`execute` API!") == "the-planexecute-api"
+    assert cl.slugify("Ceilings: bandwidth & compute") == \
+        "ceilings-bandwidth--compute"
+    assert cl.slugify("A [link](x.md) in a heading") == \
+        "a-link-in-a-heading"
+    text = ("# Usage\n"
+            "## Usage\n"          # duplicate -> -1 suffix
+            "```\n# not a heading (code fence)\n```\n"
+            "### Deep *emphasis* heading\n")
+    anchors = cl.heading_anchors(text)
+    assert anchors == {"usage", "usage-1", "deep-emphasis-heading"}
+
+
+def test_anchor_fragments_are_verified(tmp_path):
+    cl = _load_check_links()
+    (tmp_path / "other.md").write_text("# Real Section\nbody\n")
+    md = tmp_path / "x.md"
+    md.write_text(
+        "# My Title\n"
+        "good [a](#my-title) [b](other.md#real-section)\n"
+        "bad [c](#no-such-heading) [d](other.md#missing-anchor)\n"
+        "external untouched [e](https://x.test/page#frag)\n"
+        "non-md target fragment skipped [f](x.py#L10)\n")
+    (tmp_path / "x.py").write_text("pass\n")
+    broken = cl.broken_links(md, tmp_path)
+    assert [t for _, t in broken] == ["#no-such-heading",
+                                      "other.md#missing-anchor"]
+    assert all(line == 3 for line, _ in broken)
     assert cl.main([str(md)]) == 1
 
 

@@ -1,0 +1,80 @@
+"""tools/perf_trend.py: CSV parsing, regression detection, soft-warn exit."""
+
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+HEADER = ("matrix,pattern,impl,d,nnz,gflops,ai_model,"
+          "predicted_gflops,roofline_fraction,chosen")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location(
+        "perf_trend", ROOT / "tools" / "perf_trend.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _csv(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text("\n".join([HEADER] + rows) + "\n")
+    return path
+
+
+def _row(matrix, impl, d, gflops):
+    return f"{matrix},uniform,{impl},{d},1000,{gflops},0.1,1.0,0.5,csr"
+
+
+def test_parse_and_compare(tmp_path):
+    pt = _load()
+    prev = pt.parse_csv(_csv(tmp_path, "prev.csv", [
+        _row("er", "csr", 16, 2.0),
+        _row("er", "auto", 16, 2.0),
+        _row("band", "stream_r8", 64, 4.0),
+        "malformed,row",
+    ]))
+    assert prev[("er", "csr", "16")] == 2.0
+    assert len(prev) == 3                      # malformed row skipped
+    cur = pt.parse_csv(_csv(tmp_path, "cur.csv", [
+        _row("er", "csr", 16, 1.0),            # 50% drop -> regression
+        _row("er", "auto", 16, 1.85),          # 7.5% drop -> within noise
+        _row("band", "stream_r8", 64, 8.0),    # improvement
+        _row("new", "dia", 4, 1.0),            # no baseline -> ignored
+    ]))
+    regs = pt.compare(prev, cur, threshold=0.10)
+    assert [(k, round(drop, 2)) for k, _, _, drop in regs] == \
+        [(("er", "csr", "16"), 0.5)]
+
+
+def test_main_soft_warn_vs_strict(tmp_path, capsys):
+    pt = _load()
+    prev = _csv(tmp_path, "prev.csv", [_row("er", "csr", 16, 2.0)])
+    cur = _csv(tmp_path, "cur.csv", [_row("er", "csr", 16, 1.0)])
+    # Default: report + GitHub annotation, but exit 0 (soft warn).
+    assert pt.main(["--previous", str(prev), "--current", str(cur)]) == 0
+    out = capsys.readouterr().out
+    assert "::warning" in out and "REGRESSION" in out
+    # Strict: same comparison fails the job.
+    assert pt.main(["--previous", str(prev), "--current", str(cur),
+                    "--strict"]) == 1
+
+
+def test_main_handles_missing_baseline(tmp_path, capsys):
+    pt = _load()
+    cur = _csv(tmp_path, "cur.csv", [_row("er", "csr", 16, 1.0)])
+    assert pt.main(["--previous", str(tmp_path / "nope.csv"),
+                    "--current", str(cur)]) == 0
+    assert "no baseline" in capsys.readouterr().out
+    # Missing current is a hard error (the smoke run should have made it).
+    assert pt.main(["--previous", str(cur),
+                    "--current", str(tmp_path / "gone.csv")]) == 1
+
+
+def test_main_disjoint_schemas(tmp_path, capsys):
+    pt = _load()
+    prev = _csv(tmp_path, "prev.csv", [_row("old", "csr", 16, 2.0)])
+    cur = _csv(tmp_path, "cur.csv", [_row("new", "csr", 16, 1.0)])
+    assert pt.main(["--previous", str(prev), "--current", str(cur)]) == 0
+    assert "no comparable cells" in capsys.readouterr().out

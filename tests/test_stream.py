@@ -123,6 +123,76 @@ def test_reuse_horizon_can_flip_the_chosen_format():
                                rtol=5e-4, atol=5e-4)
 
 
+def test_reuse_drift_warns_and_suggests_replan(caplog):
+    """Executing >2x past the planned horizon logs one warning and flips
+    stats()["replan_suggested"] (ROADMAP streamed-dispatch follow-up)."""
+    import logging
+    m = _mats()["uniform"]
+    plan = sparse.plan(m, 4, reuse=2)
+    bs = [_b(N, 4, seed=s) for s in range(5)]       # 5 > 2 * 2
+    with caplog.at_level(logging.WARNING, logger="repro.sparse.stream"):
+        plan.execute_many(bs)
+    msgs = [r.message for r in caplog.records
+            if "reuse horizon" in r.message]
+    assert len(msgs) == 1
+    assert "replan" in msgs[0]
+    assert plan.stats()["replan_suggested"] is True
+    # Warned once: replaying more batches stays quiet.
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.sparse.stream"):
+        plan.execute_many(bs[:2])
+    assert not [r for r in caplog.records if "reuse horizon" in r.message]
+
+
+def test_reuse_drift_warns_on_per_request_execute(caplog):
+    """The serving entry point calls execute() per request (serve.py);
+    drifting past the horizon there must warn too, not just in
+    execute_many."""
+    import logging
+    m = _mats()["uniform"]
+    plan = sparse.plan(m, 4, reuse=2)
+    b = _b(N, 4)
+    with caplog.at_level(logging.WARNING, logger="repro.sparse.stream"):
+        for _ in range(5):                       # 5 > 2 * 2
+            plan.execute(b)
+    assert len([r for r in caplog.records
+                if "reuse horizon" in r.message]) == 1
+    assert plan.stats()["replan_suggested"] is True
+
+
+def test_within_horizon_stream_does_not_warn(caplog):
+    import logging
+    m = _mats()["banded"]
+    plan = sparse.plan(m, 4, reuse=8)
+    with caplog.at_level(logging.WARNING, logger="repro.sparse.stream"):
+        plan.execute_many([_b(N, 4, seed=s) for s in range(4)])
+    assert not [r for r in caplog.records if "reuse horizon" in r.message]
+    assert plan.stats()["replan_suggested"] is False
+
+
+def test_replan_at_observed_horizon_can_flip_format():
+    """replan(observed) rebuilds the plan with the conversion model fed
+    the realized horizon — the format flips exactly like planning fresh."""
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=10e9)
+    m = blocked(N, t=64, num_blocks=8, nnz_per_block=320, seed=11)
+    disp = sparse.Dispatcher(
+        hardware=hw, backend="jax", calibration=False,
+        efficiency={"csr": (0.02, 0.0), "bcsr": (0.30, 0.0),
+                    "ell": (0.001, 0.0), "dia": (0.001, 0.0)})
+    plan = sparse.plan(m, sparse.BSpec(d=16, reuse=1), dispatcher=disp)
+    assert plan.chosen == "csr"
+    replanned = plan.replan(10_000)
+    assert replanned.chosen == "bcsr"
+    assert replanned.spec.reuse == 10_000
+    assert replanned.spec.d == plan.spec.d
+    b = _b(N, 16, seed=3)
+    np.testing.assert_allclose(np.asarray(plan.execute(b)),
+                               np.asarray(replanned.execute(b)),
+                               rtol=5e-4, atol=5e-4)
+    with pytest.raises(ValueError):
+        plan.replan(0)
+
+
 def test_spec_coercion_and_stats():
     m = _mats()["banded"]
     p1 = sparse.plan(m, 8)                       # int width

@@ -1,10 +1,16 @@
-"""Intra-repo Markdown link checker — the CI docs gate.
+"""Intra-repo Markdown link + anchor checker — the CI docs gate.
 
 Scans README.md and docs/*.md (or any paths passed as arguments) for
-Markdown links and verifies that every relative target resolves to a file
-or directory in the repo.  External schemes (http/https/mailto) and
-pure-anchor links are skipped; a `#fragment` suffix on a relative link is
-stripped before the existence check.
+Markdown links and verifies that
+
+  * every relative target resolves to a file or directory in the repo;
+  * every ``#fragment`` — pure-anchor (``#usage``) or suffixed on a
+    relative Markdown target (``roofline.md#ceilings``) — matches a
+    heading anchor GitHub would render for the target file (lowercased,
+    punctuation stripped, spaces to hyphens, ``-N`` suffixes for
+    duplicate headings).
+
+External schemes (http/https/mailto) are skipped.
 
     python tools/check_links.py            # default file set
     python tools/check_links.py docs/*.md  # explicit
@@ -15,14 +21,15 @@ import pathlib
 import re
 import sys
 import urllib.parse
-from typing import List, Tuple
+from typing import List, Set, Tuple
 
 # [text](target) — target up to ')' with an optional "title", optionally
 # <>-wrapped, spaces allowed; also matches images ![alt](target).
 # Reference-style links are rare here and skipped.
 _LINK_RE = re.compile(
     r"\[[^\]]*\]\(\s*<?([^)>\"]+?)>?(?:\s+\"[^\"]*\")?\s*\)")
-_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.+?)\s*#*\s*$")
 
 
 def iter_links(text: str) -> List[Tuple[int, str]]:
@@ -34,26 +41,82 @@ def iter_links(text: str) -> List[Tuple[int, str]]:
     return out
 
 
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for one heading's text.
+
+    Inline markup is unwrapped (code spans, emphasis, link text), then:
+    lowercase, drop everything but word chars / hyphens / spaces, spaces
+    become hyphens.
+    """
+    text = re.sub(r"`([^`]*)`", r"\1", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = re.sub(r"[*_]", "", text)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_anchors(text: str) -> Set[str]:
+    """Every anchor GitHub renders for ``text``'s ATX headings.
+
+    Duplicate headings get ``-1``, ``-2``, ... suffixes, matching
+    GitHub's disambiguation.  Headings inside fenced code blocks are
+    ignored.
+    """
+    anchors: Set[str] = set()
+    seen: dict = {}
+    in_fence = False
+    for line in text.splitlines():
+        if line.lstrip().startswith(("```", "~~~")):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        match = _HEADING_RE.match(line)
+        if not match:
+            continue
+        slug = slugify(match.group(2))
+        n = seen.get(slug, 0)
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+        seen[slug] = n + 1
+    return anchors
+
+
 def broken_links(path: pathlib.Path,
                  root: pathlib.Path) -> List[Tuple[int, str]]:
     """Return (line, target) for every intra-repo link that doesn't resolve.
 
     Relative targets resolve against the Markdown file's own directory;
     absolute-style targets (leading ``/``) resolve against the repo root.
+    A ``#fragment`` is checked against the target Markdown file's heading
+    anchors (the current file for pure-anchor links).
     """
     out = []
     text = path.read_text(encoding="utf-8")
+    own_anchors = None
     for line, target in iter_links(text):
         target = target.strip()
         if target.startswith(_SKIP_PREFIXES):
             continue
-        rel = urllib.parse.unquote(target.split("#", 1)[0])
+        rel, _, frag = target.partition("#")
+        rel = urllib.parse.unquote(rel)
+        frag = urllib.parse.unquote(frag)
         if not rel:
+            # Pure anchor: must match a heading in this file.
+            if own_anchors is None:
+                own_anchors = heading_anchors(text)
+            if frag and frag not in own_anchors:
+                out.append((line, target))
             continue
         base = root if rel.startswith("/") else path.parent
         candidate = (base / rel.lstrip("/")).resolve()
         if not candidate.exists():
             out.append((line, target))
+            continue
+        if frag and candidate.suffix.lower() == ".md" and candidate.is_file():
+            if frag not in heading_anchors(
+                    candidate.read_text(encoding="utf-8")):
+                out.append((line, target))
     return out
 
 
@@ -78,12 +141,14 @@ def main(argv: List[str]) -> int:
             total_broken += 1
             continue
         for line, target in broken_links(f, root):
-            print(f"{name}:{line}: broken link -> {target}")
+            kind = "anchor" if "#" in target else "link"
+            print(f"{name}:{line}: broken {kind} -> {target}")
             total_broken += 1
     if total_broken:
-        print(f"{total_broken} broken intra-repo link(s)")
+        print(f"{total_broken} broken intra-repo link(s)/anchor(s)")
         return 1
-    print(f"checked {len(files)} file(s): all intra-repo links resolve")
+    print(f"checked {len(files)} file(s): all intra-repo links and "
+          f"anchors resolve")
     return 0
 
 

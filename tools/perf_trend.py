@@ -1,0 +1,113 @@
+"""Perf trend: diff the current smoke_spmm.csv against the previous run's.
+
+CI uploads ``benchmarks/out/smoke_spmm.csv`` on every run
+(``.github/workflows/ci.yml``); this tool compares the current CSV
+against the artifact downloaded from the last successful run and flags
+GFLOP/s regressions beyond a threshold (default 10%).
+
+The gate is a *soft warn* by default: regressions print as GitHub
+``::warning::`` annotations and the exit code stays 0, because single
+cells on shared CI hosts swing well beyond 10% between identical runs
+(the same wall-clock noise the claim checks aggregate around).  Pass
+``--strict`` to turn regressions into a non-zero exit.
+
+    python tools/perf_trend.py \
+        --previous prev-artifact/smoke_spmm.csv \
+        --current benchmarks/out/smoke_spmm.csv
+
+CSV schema: ``benchmarks.spmm_suite.CSV_HEADER`` (streamed rows append
+with the mode+reuse encoded in the impl column, e.g. ``stream_r8``).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+Key = Tuple[str, str, str]          # (matrix, impl, d)
+
+
+def parse_csv(path: pathlib.Path) -> Dict[Key, float]:
+    """Read one smoke/table5 CSV into ``(matrix, impl, d) -> gflops``."""
+    rows: Dict[Key, float] = {}
+    with open(path, newline="", encoding="utf-8") as f:
+        for rec in csv.DictReader(f):
+            try:
+                rows[(rec["matrix"], rec["impl"], rec["d"])] = float(
+                    rec["gflops"])
+            except (KeyError, TypeError, ValueError):
+                continue            # malformed/partial row: skip, don't die
+    return rows
+
+
+def compare(prev: Dict[Key, float], cur: Dict[Key, float],
+            threshold: float) -> List[Tuple[Key, float, float, float]]:
+    """Cells regressing by more than ``threshold`` (fractional drop).
+
+    Returns ``(key, prev_gflops, cur_gflops, drop)`` sorted by worst
+    drop first; only keys present in both CSVs are compared.
+    """
+    out = []
+    for key in sorted(prev.keys() & cur.keys()):
+        p, c = prev[key], cur[key]
+        if p <= 0:
+            continue
+        drop = (p - c) / p
+        if drop > threshold:
+            out.append((key, p, c, drop))
+    return sorted(out, key=lambda r: -r[3])
+
+
+def main(argv: List[str]) -> int:
+    """Compare CSVs, print the trend report, return the exit code."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--previous", required=True,
+                    help="baseline CSV (last successful run's artifact)")
+    ap.add_argument("--current", required=True,
+                    help="this run's CSV")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="fractional GFLOP/s drop that counts as a "
+                         "regression (default 0.10)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on regressions instead of soft-warning")
+    args = ap.parse_args(argv)
+
+    prev_path = pathlib.Path(args.previous)
+    if not prev_path.is_file():
+        print(f"perf-trend: no baseline at {prev_path} (first run, or "
+              f"artifact fetch failed); nothing to compare")
+        return 0
+    cur_path = pathlib.Path(args.current)
+    if not cur_path.is_file():
+        print(f"perf-trend: current CSV missing at {cur_path}")
+        return 1
+
+    prev, cur = parse_csv(prev_path), parse_csv(cur_path)
+    shared = prev.keys() & cur.keys()
+    if not shared:
+        print("perf-trend: no comparable cells between baseline and "
+              "current (schema or suite changed); nothing to compare")
+        return 0
+
+    regressions = compare(prev, cur, args.threshold)
+    improved = sum(1 for k in shared
+                   if prev[k] > 0 and (cur[k] - prev[k]) / prev[k]
+                   > args.threshold)
+    print(f"perf-trend: {len(shared)} comparable cells, "
+          f"{len(regressions)} regressed >{args.threshold:.0%}, "
+          f"{improved} improved >{args.threshold:.0%}")
+    for (matrix, impl, d), p, c, drop in regressions:
+        msg = (f"{matrix}/{impl}/d={d}: {p:.3f} -> {c:.3f} GFLOP/s "
+               f"({drop:.0%} drop)")
+        # GitHub annotation so the warning surfaces on the PR checks page.
+        print(f"::warning title=SpMM perf regression::{msg}")
+        print(f"  REGRESSION {msg}")
+    if regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
