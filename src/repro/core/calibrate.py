@@ -101,6 +101,10 @@ class Calibration:
     fingerprint: str                  # HardwareSpec.fingerprint()
     backend: str
     entries: Tuple[FormatCalibration, ...]
+    #: ``repro.kernels.registry.REGISTRY_VERSION`` at fit time; 0 marks
+    #: files saved before versioning existed.  ``staleness_note`` flags
+    #: calibrations predating the active kernel set.
+    registry_version: int = 0
 
     def efficiency(self) -> Dict[str, Tuple[float, float]]:
         """The ``format -> (peak_fraction, d_half)`` ceiling table."""
@@ -194,7 +198,44 @@ class CalibrationStore:
         return Calibration(hardware=payload["hardware"],
                            fingerprint=payload["fingerprint"],
                            backend=payload.get("backend", "jax"),
-                           entries=entries)
+                           entries=entries,
+                           registry_version=int(
+                               payload.get("registry_version", 0)))
+
+    def staleness_note(self, hw: HardwareSpec,
+                       backend: str = "jax") -> Optional[str]:
+        """One-line staleness warning for ``(hw, backend)``, or ``None``.
+
+        Two conditions earn a note (both mean the persisted numbers do
+        not describe what is about to run): the stored fingerprint does
+        not match the active spec (``load`` already refuses it — this
+        surfaces *why* the dispatcher fell back to defaults), or the
+        calibration was fitted against an older kernel registry version
+        than the one registered now.  A missing file is not stale:
+        defaults are then the intended behavior.
+        """
+        path = self.path_for(hw, backend)
+        if not path.is_file():
+            return None
+        try:
+            payload = json.loads(path.read_text(encoding="utf-8"))
+        except (OSError, json.JSONDecodeError):
+            return (f"calibration file {path.name} is unreadable; using "
+                    f"default ceilings (re-run benchmarks/run.py "
+                    f"--calibrate)")
+        if payload.get("fingerprint") != hw.fingerprint():
+            return (f"calibration {path.name} was fitted for fingerprint "
+                    f"{payload.get('fingerprint')}, active spec is "
+                    f"{hw.fingerprint()}; using default ceilings (re-run "
+                    f"benchmarks/run.py --calibrate)")
+        from repro.kernels import registry
+        stored = int(payload.get("registry_version", 0))
+        if stored < registry.REGISTRY_VERSION:
+            return (f"calibration {path.name} predates kernel registry "
+                    f"v{registry.REGISTRY_VERSION} (fitted at "
+                    f"v{stored}); ceilings may describe retired kernels "
+                    f"(re-run benchmarks/run.py --calibrate)")
+        return None
 
 
 def _calibration_matrices(scale: int, bcsr_block: int) -> Dict[str, object]:
@@ -299,7 +340,8 @@ def calibrate(hw: HardwareSpec, *, backend: str = "jax",
             d_half=d_half, sustained_gflops=g_inf,
             useful_fraction=useful_fraction, measured=measured))
     cal = Calibration(hardware=hw.name, fingerprint=hw.fingerprint(),
-                      backend=backend, entries=tuple(entries))
+                      backend=backend, entries=tuple(entries),
+                      registry_version=registry.REGISTRY_VERSION)
     if store is not None:
         store.save(cal)
     return cal

@@ -22,6 +22,15 @@ class HardwareSpec:
     vmem_bytes: int = 0        # software-managed fast memory (VMEM / LLC)
     hbm_bytes: int = 0         # main memory capacity per device
     mxu_tile: tuple = (128, 128)  # native matmul tile (rows, cols)
+    #: Aggregate interconnect bandwidth one device can drive during a
+    #: collective (bytes/s).  0 means "unknown": model collectives at the
+    #: per-link ``link_bandwidth``, or — when that is 0 too (single-host
+    #: virtual devices) — at ``hbm_bandwidth``, since virtual-device
+    #: collectives are memcpys through the same DRAM.
+    ici_bytes_per_s: float = 0.0
+    #: Fixed launch/synchronization latency per collective hop (seconds);
+    #: collectives pay ``ceil(log2(devices))`` hops in the cost model.
+    collective_latency_s: float = 10e-6
 
     @property
     def ridge_point(self) -> float:
@@ -32,6 +41,13 @@ class HardwareSpec:
         """Classic roofline: P = min(beta * AI, pi)."""
         return min(self.hbm_bandwidth * ai, self.peak_flops)
 
+    @property
+    def collective_bandwidth(self) -> float:
+        """Effective bytes/s a device moves during collectives (see
+        ``ici_bytes_per_s`` for the fallback chain)."""
+        return (self.ici_bytes_per_s or self.link_bandwidth
+                or self.hbm_bandwidth)
+
     def fingerprint(self) -> str:
         """Stable id of this spec's *compute* identity (12 hex chars).
 
@@ -41,7 +57,11 @@ class HardwareSpec:
         routinely replaced by the run-time STREAM measurement
         (``benchmarks/spmm_suite.make_dispatcher``), and the fitted
         ``(peak_fraction, d_half)`` ceilings describe the compute side
-        of the roofline, which that substitution does not change.
+        of the roofline, which that substitution does not change.  The
+        interconnect fields (``ici_bytes_per_s``,
+        ``collective_latency_s``) are excluded for the same reason: they
+        only enter the sharded communication model, never the per-device
+        compute ceiling a calibration fits.
         """
         payload = json.dumps({
             "name": self.name, "peak_flops": self.peak_flops,
@@ -71,6 +91,8 @@ TPU_V5E = HardwareSpec(
     vmem_bytes=128 * 2**20,
     hbm_bytes=16 * 2**30,
     mxu_tile=(128, 128),
+    ici_bytes_per_s=4 * 50e9,         # 4 ICI links per chip (2D torus)
+    collective_latency_s=1e-6,
 )
 
 # Host CPU of this container (used only for wall-clock benchmark *context*;
@@ -83,6 +105,9 @@ HOST_CPU = HardwareSpec(
     vmem_bytes=32 * 2**20,
     hbm_bytes=35 * 2**30,
     mxu_tile=(1, 4),
+    # Virtual host devices share one DRAM: collectives are memcpys, so
+    # collective_bandwidth falls back to hbm_bandwidth (ici stays 0).
+    collective_latency_s=20e-6,
 )
 
 

@@ -15,6 +15,7 @@ sum under zero overlap.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro.core.hardware import HardwareSpec
@@ -80,6 +81,80 @@ def place(name: str, traffic: TrafficBreakdown, hw: HardwareSpec,
     """Place a sparsity-model traffic estimate on a hardware roofline."""
     return RooflinePoint(name=name, ai=traffic.ai, flops=traffic.flops,
                          hardware=hw, attained_flops_per_s=attained)
+
+
+def collective_time(bytes_on_wire: float, hw: HardwareSpec,
+                    devices: int, *, collectives: int = 1) -> float:
+    """Seconds one device spends moving ``bytes_on_wire`` collectively.
+
+    The cost model is the standard ring/tree hybrid: a bandwidth term
+    (bytes over ``hw.collective_bandwidth``) plus a latency term of
+    ``collectives * collective_latency_s * ceil(log2(devices))`` — each
+    collective synchronizes the mesh over ~log2(D) hops regardless of
+    payload.  With one device there is no wire and the cost is 0.
+
+    Args:
+        bytes_on_wire: per-device bytes the collective moves (for ring
+            all-gather / reduce-scatter of an ``S``-byte global buffer
+            this is ``(D-1)/D * S``).
+        hw: hardware spec supplying ``collective_bandwidth`` and
+            ``collective_latency_s``.
+        devices: mesh size D.
+        collectives: number of distinct collective launches to charge
+            latency for.
+
+    Returns:
+        Modeled seconds.
+    """
+    if devices <= 1:
+        return 0.0
+    hops = math.ceil(math.log2(devices))
+    bw = hw.collective_bandwidth
+    transfer = bytes_on_wire / bw if bw > 0 else 0.0
+    return transfer + collectives * hw.collective_latency_s * hops
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRoofline:
+    """Per-shard roofline: the sparsity-aware AI of the *critical* shard
+    plus the collective term of the chosen B-distribution strategy.
+
+    This is the sharded tier's analogue of :class:`RooflinePoint`: the
+    compute/memory side is evaluated on the most loaded shard (the SPMD
+    program runs at the speed of its slowest participant), and the
+    communication side adds the strategy's collective bytes at
+    ``collective_bandwidth``.  ``predicted_flops_per_s`` is the
+    whole-matrix useful FLOP rate under zero compute/communication
+    overlap — conservative, matching how shard_map sequences the
+    collective after the local kernel.
+    """
+
+    strategy: str                  # "replicate" | "all_gather" | "reduce_scatter"
+    devices: int
+    shard_ai: float                # AI of the most loaded shard
+    critical_flops: float          # useful FLOPs on the most loaded shard
+    total_flops: float             # useful FLOPs of the whole SpMM
+    compute_s: float               # critical shard local kernel time
+    collective_s: float            # strategy's collective cost
+    collective_bytes: float        # per-device bytes on the wire
+
+    @property
+    def total_s(self) -> float:
+        """Zero-overlap step time: local compute + collectives."""
+        return self.compute_s + self.collective_s
+
+    @property
+    def predicted_flops_per_s(self) -> float:
+        """Whole-matrix useful FLOP/s implied by ``total_s``."""
+        if self.total_s <= 0:
+            return 0.0
+        return self.total_flops / self.total_s
+
+    @property
+    def dominant(self) -> str:
+        """Which term binds: ``"compute"`` or ``"collective"``."""
+        return ("collective" if self.collective_s > self.compute_s
+                else "compute")
 
 
 @dataclasses.dataclass(frozen=True)

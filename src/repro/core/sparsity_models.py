@@ -182,6 +182,39 @@ def ai_scale_free(n: int, nnz: int, d: int, *, alpha: float = 2.2,
     )
 
 
+def shard_traffic(tb: TrafficBreakdown, *, nnz_fraction: float,
+                  rows_fraction: float,
+                  bytes_b: float | None = None) -> TrafficBreakdown:
+    """Scale a whole-matrix traffic model down to one shard.
+
+    The sharded tier (``repro.sparse.shard``) evaluates a per-shard AI:
+    FLOPs and A-traffic scale with the shard's share of the nonzeros, the
+    C write-out with its share of the output rows, and the B term either
+    scales with nnz too (random/scale-free gathers follow the nonzeros)
+    or is replaced outright (``bytes_b``) when the shard streams B
+    wholesale, as a diagonal band does.
+
+    Args:
+        tb: the whole-matrix :class:`TrafficBreakdown` from the detected
+            regime's Section III model.
+        nnz_fraction: this shard's nnz / total nnz.
+        rows_fraction: this shard's output rows / n.
+        bytes_b: explicit per-shard B traffic in bytes; ``None`` scales
+            ``tb.bytes_b`` by ``nnz_fraction``.
+
+    Returns:
+        A per-shard :class:`TrafficBreakdown` (model name suffixed with
+        ``"+shard"``).
+    """
+    return TrafficBreakdown(
+        flops=tb.flops * nnz_fraction,
+        bytes_a=tb.bytes_a * nnz_fraction,
+        bytes_b=tb.bytes_b * nnz_fraction if bytes_b is None else bytes_b,
+        bytes_c=tb.bytes_c * rows_fraction,
+        model=f"{tb.model}+shard",
+    )
+
+
 _MODELS = {
     "random": ai_random,
     "diagonal": ai_diagonal,

@@ -46,6 +46,15 @@ from repro.kernels.grouped_matmul import grouped_matmul_pallas
 
 BACKENDS: Tuple[str, ...] = ("jax", "pallas")
 
+#: Monotone version of the registered kernel set and their layout/sizing
+#: rules.  Bump it whenever a change invalidates previously measured
+#: compute ceilings (new kernels, retuned slab sizing, layout changes);
+#: ``repro.core.calibrate`` stamps saved calibrations with it so
+#: ``plan.summary()`` can nudge when a calibration predates the kernels
+#: it would be applied to.  History: 1 = initial KernelSpec registry,
+#: 2 = per-d B-slab re-packing (``KernelContext.plan_d``).
+REGISTRY_VERSION: int = 2
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
@@ -75,6 +84,15 @@ def choose_b_tile(n: int, vmem_bytes: int, *, bd: int = 512,
     index chunks, gather scratch, and double buffering).  Returns ``None``
     when all of B fits — the layout then reduces to the unstreamed
     original (one slab, global column ids).
+
+    ``bd`` is the kernel's d-tile width the slab must host.  The default
+    512 is the widest tile — safe for any ``d`` but, when the planned
+    width is far below it, it undersizes the slab by the ratio
+    ``512 / bd`` (the budget is charged for columns that never
+    materialize).  Callers that know ``d`` at plan time pass the actual
+    tile (``KernelContext.plan_d`` routes this through
+    ``resolve_b_tile``), so small-d plans get proportionally taller
+    slabs and fewer slab passes.
     """
     if vmem_bytes <= 0:
         return None
@@ -98,6 +116,10 @@ class KernelContext:
         chunk: CSR kernel nonzeros per packed chunk.
         b_tile: explicit B row-slab override for the streamed CSR kernel;
             None picks it from ``hardware.vmem_bytes`` (``choose_b_tile``).
+        plan_d: the dense width the plan was made for, when known; lets
+            ``resolve_b_tile`` size the B slab for the actual d-tile
+            instead of the worst-case 512 (per-d slab re-packing).  None
+            keeps the conservative sizing.
         convert: optional ``(m, format) -> container`` hook so prepare
             reuses the caller's conversion cache (the dispatcher passes
             its own ``convert`` method); None converts directly.
@@ -110,6 +132,7 @@ class KernelContext:
     row_tile: int = 8
     chunk: int = 128
     b_tile: Optional[int] = None
+    plan_d: Optional[int] = None
     convert: Optional[Callable[[Any, str], Any]] = None
 
     def resolve_interpret(self) -> bool:
@@ -120,7 +143,9 @@ class KernelContext:
         """The streamed-CSR slab size for an ``[n, n]`` matrix."""
         if self.b_tile is not None:
             return self.b_tile if self.b_tile < n else None
-        return choose_b_tile(n, self.hardware.vmem_bytes)
+        bd = 512 if self.plan_d is None else min(512,
+                                                 pallas_block_d(self.plan_d))
+        return choose_b_tile(n, self.hardware.vmem_bytes, bd=bd)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,3 +22,29 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // data))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_shard_mesh(num_shards: int | None = None):
+    """1-D mesh for the sharded SpMM tier (``repro.sparse.shard``).
+
+    Args:
+        num_shards: devices to use; defaults to all available.  On CPU,
+            export ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+            *before* the first jax call to get 8 virtual devices.
+
+    Returns:
+        A ``("shard",)`` mesh over the first ``num_shards`` devices.
+
+    Raises:
+        ValueError: if more shards are requested than devices exist.
+    """
+    devices = jax.devices()
+    if num_shards is None:
+        num_shards = len(devices)
+    if num_shards > len(devices):
+        raise ValueError(
+            f"requested {num_shards} shards but only {len(devices)} "
+            f"devices are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N on CPU)")
+    return jax.make_mesh((num_shards,), ("shard",),
+                         devices=devices[:num_shards])

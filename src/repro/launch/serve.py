@@ -14,6 +14,15 @@ side through the bound kernel (``docs/serving.md``):
         --spmm-structure moe-block --spmm-n 4096 --spmm-d 64 \
         --spmm-steps 64
 
+``--spmm-shards N`` serves the same stream through the sharded tier
+(``repro.sparse.shard``): the plan partitions the operator across an
+N-device mesh and replays under ``shard_map``; the printed summary adds
+the B-distribution strategy audit (``docs/sharding.md``):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --spmm-stream \
+        --spmm-shards -1 --spmm-structure moe-block
+
 ``--calibrate`` runs the on-host compute-ceiling calibration
 (``repro.core.calibrate``) at startup and persists it, so the serving
 plan predicts from measured ``(peak_fraction, d_half)`` ceilings.
@@ -109,8 +118,15 @@ def serve_spmm_stream(args) -> None:
         return jnp.asarray(
             rng.normal(size=(m.n, args.spmm_d)).astype(np.float32))
 
+    mesh = None
+    shards = getattr(args, "spmm_shards", 0)    # absent on hand-built args
+    if shards:
+        from repro.launch.mesh import make_shard_mesh
+        mesh = make_shard_mesh(None if shards < 0 else shards)
+
     t0 = time.perf_counter()
-    plan = sparse.plan(m, sparse.BSpec(d=args.spmm_d, reuse=args.spmm_steps))
+    plan = sparse.plan(m, sparse.BSpec(d=args.spmm_d, reuse=args.spmm_steps),
+                       mesh=mesh)
     jax.block_until_ready(plan.execute(next_batch()))   # bind + compile
     startup_s = time.perf_counter() - t0
     plan.reset_stats()     # the warm-up is startup, not a served request
@@ -124,7 +140,9 @@ def serve_spmm_stream(args) -> None:
     lat_us = np.asarray(lat) * 1e6
     flops = 2.0 * m.nnz * args.spmm_d
 
-    print(plan.dispatch.summary())
+    # ShardedPlan.summary() adds the B-strategy audit under the format
+    # decision table; the single-device plan prints the table alone.
+    print(plan.summary() if mesh is not None else plan.dispatch.summary())
     single = sparse.plan_spmm(m, args.spmm_d, reuse=1)
     note = ("same as single-shot" if single.chosen == plan.chosen else
             f"single-shot would pick {single.chosen}")
@@ -185,6 +203,11 @@ def main():
                     help="requests to serve = the plan's reuse horizon")
     ap.add_argument("--spmm-compare", action="store_true",
                     help="also time per-call dispatch of the same stream")
+    ap.add_argument("--spmm-shards", type=int, default=0,
+                    help="serve through the sharded tier on this many "
+                         "devices (-1 = all visible); on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first")
     ap.add_argument("--calibrate", action="store_true",
                     help="run the on-host ceiling calibration at startup; "
                          "the serving plan then predicts from measured "

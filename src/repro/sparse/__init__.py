@@ -13,6 +13,7 @@ remain exported for direct use.
 from repro.sparse.formats import (
     BCSRMatrix, CSRMatrix, DIAMatrix, ELLMatrix,
     coo_to_bcsr, coo_to_csr, coo_to_dense, coo_to_dia, coo_to_ell,
+    nnz_balanced_splits,
 )
 from repro.sparse.spmm import (
     IMPLEMENTATIONS, bcsr_spmm, bcsr_spmm_scan, csr_spmm, dense_spmm,
@@ -23,13 +24,18 @@ from repro.sparse.dispatch import (
     plan_spmm, spmm,
 )
 from repro.sparse.stream import BSpec, StreamPlan, as_b_spec, plan
+from repro.sparse.shard import (
+    B_STRATEGIES, ShardedPlan, ShardStrategyEval,
+)
 
 __all__ = [
     "BCSRMatrix", "CSRMatrix", "DIAMatrix", "ELLMatrix",
     "coo_to_bcsr", "coo_to_csr", "coo_to_dense", "coo_to_dia", "coo_to_ell",
+    "nnz_balanced_splits",
     "IMPLEMENTATIONS", "bcsr_spmm", "bcsr_spmm_scan", "csr_spmm",
     "dense_spmm", "dia_spmm", "ell_spmm",
     "DispatchPlan", "Dispatcher", "FORMATS", "STRATEGIES",
     "default_dispatcher", "plan_spmm", "spmm",
     "BSpec", "StreamPlan", "as_b_spec", "plan",
+    "B_STRATEGIES", "ShardedPlan", "ShardStrategyEval",
 ]

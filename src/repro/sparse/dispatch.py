@@ -104,6 +104,10 @@ class DispatchPlan:
     backend: str                      # "jax" | "pallas"
     hardware: str                     # HardwareSpec.name used for prediction
     candidates: Tuple[CandidateEval, ...]
+    #: Staleness warning from the CalibrationStore (fingerprint mismatch
+    #: or a calibration predating the kernel registry version); None when
+    #: the store is silent.  Rendered by :meth:`summary`.
+    calibration_note: Optional[str] = None
 
     @property
     def skips(self) -> Dict[str, str]:
@@ -148,6 +152,8 @@ class DispatchPlan:
                 perf = "(not modeled)"
             tail = "" if c.eligible else f"  SKIP: {c.skip_reason}"
             lines.append(f" {mark} {c.format:4s} {perf}{tail}")
+        if self.calibration_note:
+            lines.append(f" ! {self.calibration_note}")
         return "\n".join(lines)
 
 
@@ -203,6 +209,7 @@ class Dispatcher:
         #: disables calibration lookup (the calibrator itself does this).
         self.calibration = calibration
         self._cal_cache: Dict[str, Dict[str, Tuple[float, float]]] = {}
+        self._note_cache: Dict[tuple, Optional[str]] = {}
         self.sizeof_val = sizeof_val
         self.sizeof_idx = sizeof_idx
         self._plans: Dict[tuple, DispatchPlan] = {}
@@ -272,10 +279,22 @@ class Dispatcher:
             self._cal_cache[key] = cal.efficiency() if cal else {}
         return self._cal_cache[key]
 
+    def _staleness(self, hw: HardwareSpec, backend: str) -> Optional[str]:
+        """The CalibrationStore's staleness note for ``(hw, backend)``,
+        cached per fingerprint so planning does not reread the file."""
+        if self.calibration is False:
+            return None
+        key = (hw.fingerprint(), backend)
+        if key not in self._note_cache:
+            store = self.calibration or CalibrationStore()
+            self._note_cache[key] = store.staleness_note(hw, backend)
+        return self._note_cache[key]
+
     def refresh_calibration(self) -> None:
         """Drop cached calibration lookups and plans (e.g. after a new
         ``repro.core.calibrate.calibrate(..., store=...)`` run)."""
         self._cal_cache.clear()
+        self._note_cache.clear()
         self._plans.clear()
 
     def _ceiling(self, format: str, hw: HardwareSpec,
@@ -484,7 +503,8 @@ class Dispatcher:
         plan = DispatchPlan(
             chosen=chosen, strategy=strategy, regime=report.regime, d=d,
             reuse=reuse, backend=backend, hardware=hw.name,
-            candidates=tuple(cands))
+            candidates=tuple(cands),
+            calibration_note=self._staleness(hw, backend))
         self._plans[key] = plan
         return plan
 
@@ -544,9 +564,13 @@ class Dispatcher:
             hardware=self._resolve_hardware(plan.backend),
             bcsr_block=self.bcsr_block,
             max_dia_offsets=self.max_dia_offsets,
+            plan_d=plan.d,          # per-d B-slab re-packing
             convert=self.convert)   # prepare shares the conversion cache
+        # The resolved d-tile is part of the layout identity: two plans
+        # whose widths map to different slab sizings must not share one
+        # packed layout.
         ck = (self._track(m), "layout", *spec.layout_cache_key,
-              self.bcsr_block)
+              self.bcsr_block, registry.pallas_block_d(plan.d))
         if ck not in self._converted:
             self._converted[ck] = spec.prepare(m, ctx)
         layout = self._converted[ck]

@@ -242,6 +242,57 @@ def coo_to_dia(m, dtype=jnp.float32, max_offsets: int = 64) -> DIAMatrix:
                      offsets=tuple(int(o) for o in offs), n=m.n)
 
 
+# --------------------------------------------------------------------------
+# Shard splitters (consumed by repro.sparse.shard).
+# --------------------------------------------------------------------------
+
+def nnz_balanced_splits(weights, num_shards: int, *,
+                        align: int = 1) -> np.ndarray:
+    """Contiguous split points balancing a weight vector across shards.
+
+    The prefix-sum splitter behind the sharded tier: given per-item
+    weights (nnz per row for CSR/ELL/BCSR row blocks, nnz per column for
+    the reduce-scatter column partition, nnz per diagonal for DIA band
+    shards), pick ``num_shards - 1`` cut points so every contiguous chunk
+    carries ~``total / num_shards`` weight.  Each cut lands on the
+    aligned position whose prefix sum is closest to its ideal target, so
+    the imbalance of any shard is bounded by the heaviest aligned group
+    of items — for BCSR pass ``align=t`` to keep row blocks intact.
+
+    Args:
+        weights: per-item nonnegative weights, length ``n``.
+        num_shards: number of contiguous chunks (>= 1).
+        align: cut points are restricted to multiples of this (``n`` must
+            divide by it).
+
+    Returns:
+        Monotone int64 bounds of shape ``[num_shards + 1]`` with
+        ``bounds[0] == 0`` and ``bounds[-1] == n``; shard ``i`` owns
+        items ``[bounds[i], bounds[i+1])``.
+
+    Raises:
+        ValueError: on ``num_shards < 1``, ``align < 1``, or ``n`` not a
+            multiple of ``align``.
+    """
+    counts = np.asarray(weights, dtype=np.int64).ravel()
+    n = counts.shape[0]
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if align < 1:
+        raise ValueError(f"align must be >= 1, got {align}")
+    if n % align != 0:
+        raise ValueError(f"{n} items not divisible by align={align}")
+    csum = np.concatenate([[0], np.cumsum(counts)])
+    cand = np.arange(0, n + 1, align)          # aligned cut positions
+    targets = csum[-1] * np.arange(1, num_shards) / num_shards
+    pos = np.clip(np.searchsorted(csum[cand], targets), 1, cand.size - 1)
+    left, right = cand[pos - 1], cand[pos]
+    pick = np.where(targets - csum[left] <= csum[right] - targets,
+                    left, right)
+    bounds = np.concatenate([[0], pick, [n]])
+    return np.maximum.accumulate(bounds).astype(np.int64)
+
+
 def coo_to_dense(m, dtype=jnp.float32) -> jnp.ndarray:
     """Materialize the full dense [n, n] array (reference/tests only)."""
     dense = np.zeros((m.n, m.n), dtype=dtype)

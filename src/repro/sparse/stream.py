@@ -133,9 +133,19 @@ class StreamPlan:
         # execute.  (The first execute still pays the kernel's one-time
         # XLA compile for this shape — latency-sensitive servers should
         # warm up with one batch, as launch/serve.py does.)
-        self._run = dispatcher.executor(m, self.dispatch)
+        self._run = self._bind()
         self.executed = 0
         self._reuse_warned = False
+
+    def _bind(self):
+        """Resolve the executor this plan replays.
+
+        Subclasses override this hook to bind a different execution
+        tier over the same DispatchPlan — ``repro.sparse.shard``'s
+        :class:`~repro.sparse.shard.ShardedPlan` returns a ``shard_map``
+        closure here instead of the single-device kernel.
+        """
+        return self._dispatcher.executor(self._m, self.dispatch)
 
     @property
     def n(self) -> int:
@@ -304,6 +314,7 @@ class StreamPlan:
 
 def plan(m: COOMatrix, b_spec: Union[int, BSpec, jnp.ndarray], *,
          strategy: str = "auto", reuse: Optional[int] = None,
+         mesh=None, b_strategy: str = "auto",
          dispatcher: Optional[_dispatch.Dispatcher] = None) -> StreamPlan:
     """Plan once for a stream of right-hand sides; the serving entry point.
 
@@ -314,13 +325,26 @@ def plan(m: COOMatrix, b_spec: Union[int, BSpec, jnp.ndarray], *,
         strategy: ``"auto"`` or a format name to force.
         reuse: shorthand override for ``BSpec.reuse`` (expected number of
             executions).
+        mesh: optional device mesh (e.g. from ``repro.launch.mesh``).
+            When given, returns a :class:`repro.sparse.shard.ShardedPlan`
+            that partitions the matrix across the mesh and executes under
+            ``shard_map``.
+        b_strategy: sharded-tier B-distribution strategy (``"auto"`` or
+            one of ``repro.sparse.shard.B_STRATEGIES``); only meaningful
+            with ``mesh``.
         dispatcher: dispatcher to plan on; defaults to the module-level one
             shared with ``sparse.spmm``.
 
     Returns:
-        A bound :class:`StreamPlan`; call ``execute`` / ``execute_many`` /
-        ``execute_wide`` on it.
+        A bound :class:`StreamPlan` (or ``ShardedPlan`` when ``mesh`` is
+        given); call ``execute`` / ``execute_many`` / ``execute_wide``.
     """
     spec = as_b_spec(b_spec, reuse=reuse)
     disp = dispatcher or _dispatch.default_dispatcher()
+    if mesh is not None:
+        from repro.sparse.shard import ShardedPlan
+        return ShardedPlan(disp, m, spec, mesh, strategy=strategy,
+                           b_strategy=b_strategy)
+    if b_strategy != "auto":
+        raise ValueError("b_strategy requires a mesh (sharded tier)")
     return StreamPlan(disp, m, spec, strategy=strategy)

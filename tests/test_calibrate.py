@@ -237,3 +237,69 @@ def test_calibrate_end_to_end(tmp_path):
     assert set(plan.ceiling_sources.values()) == {"calibrated"}
     with pytest.raises(ValueError):
         calibrate(hw, formats=["nope"], scale=6)
+
+
+# --------------------------------------------------------------------- #
+# Staleness nudge: plan summaries flag calibrations that no longer
+# describe what is about to run.
+# --------------------------------------------------------------------- #
+
+def test_staleness_note_version_and_fingerprint(tmp_path):
+    from repro.kernels import registry
+    store = CalibrationStore(root=tmp_path)
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+
+    assert store.staleness_note(hw) is None          # missing file: no nudge
+
+    store.save(_fake_calibration(hw))                # registry_version=0
+    note = store.staleness_note(hw)
+    assert note is not None and "predates kernel registry" in note
+    assert f"v{registry.REGISTRY_VERSION}" in note
+
+    fresh = dataclasses.replace(_fake_calibration(hw),
+                                registry_version=registry.REGISTRY_VERSION)
+    store.save(fresh)
+    assert store.staleness_note(hw) is None          # current: silent
+
+    # Fingerprint drift beats version currency: the note explains why
+    # load() refused the file and the dispatcher fell back to defaults.
+    changed = dataclasses.replace(hw, peak_flops=hw.peak_flops * 2)
+    note = store.staleness_note(changed)
+    assert note is not None and "fingerprint" in note
+
+    store.path_for(hw).write_text("{not json")
+    assert "unreadable" in store.staleness_note(hw)
+
+
+def test_staleness_note_reaches_plan_summary(tmp_path):
+    from repro.kernels import registry
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+    store = CalibrationStore(root=tmp_path)
+    store.save(_fake_calibration(hw))                # stale (version 0)
+    disp = sparse.Dispatcher(hardware=hw, calibration=store)
+    plan = disp.plan(_mats()["random"], 8)
+    assert plan.calibration_note is not None
+    assert "predates kernel registry" in plan.summary()
+
+    # Re-calibrating clears the nudge (refresh drops the note cache).
+    store.save(dataclasses.replace(
+        _fake_calibration(hw), registry_version=registry.REGISTRY_VERSION))
+    disp.refresh_calibration()
+    plan2 = disp.plan(_mats()["random"], 16)
+    assert plan2.calibration_note is None
+    assert "predates" not in plan2.summary()
+
+    # calibration=False opts out of the nudge entirely.
+    disp_off = sparse.Dispatcher(hardware=hw, calibration=False)
+    assert disp_off.plan(_mats()["random"], 8).calibration_note is None
+
+
+def test_calibrate_stamps_registry_version(tmp_path):
+    from repro.kernels import registry
+    hw = dataclasses.replace(HOST_CPU, hbm_bandwidth=8e9)
+    store = CalibrationStore(root=tmp_path)
+    calibrate(hw, backend="jax", scale=6, repeats=1, d_values=(4, 16),
+              bcsr_block=16, store=store)
+    payload = json.loads(store.path_for(hw).read_text())
+    assert payload["registry_version"] == registry.REGISTRY_VERSION
+    assert store.staleness_note(hw) is None

@@ -28,7 +28,8 @@ def _load_check_links():
 # --------------------------------------------------------------------- #
 
 def test_docs_exist():
-    for name in ("architecture.md", "roofline.md", "serving.md"):
+    for name in ("architecture.md", "roofline.md", "serving.md",
+                 "sharding.md"):
         assert (DOCS / name).is_file(), f"docs/{name} missing"
 
 

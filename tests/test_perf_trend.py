@@ -66,10 +66,35 @@ def test_main_handles_missing_baseline(tmp_path, capsys):
     cur = _csv(tmp_path, "cur.csv", [_row("er", "csr", 16, 1.0)])
     assert pt.main(["--previous", str(tmp_path / "nope.csv"),
                     "--current", str(cur)]) == 0
-    assert "no baseline" in capsys.readouterr().out
+    assert "no readable baseline" in capsys.readouterr().out
     # Missing current is a hard error (the smoke run should have made it).
     assert pt.main(["--previous", str(cur),
                     "--current", str(tmp_path / "gone.csv")]) == 1
+
+
+def test_trend_window_median_baseline(tmp_path):
+    """Multi-run window: each cell's baseline is its median over the runs."""
+    pt = _load()
+    runs = [
+        _csv(tmp_path, "r1.csv", [_row("er", "csr", 16, 2.0)]),
+        _csv(tmp_path, "r2.csv", [_row("er", "csr", 16, 10.0)]),   # spike
+        _csv(tmp_path, "r3.csv", [_row("er", "csr", 16, 2.2),
+                                  _row("band", "shard8_all_gather", 64,
+                                       4.0)]),
+    ]
+    prev = pt.baseline_window([pathlib.Path(p) for p in runs])
+    assert prev[("er", "csr", "16")] == 2.2       # median, not the spike
+    assert prev[("band", "shard8_all_gather", "64")] == 4.0   # partial cell
+
+    # 2.0 is an 80% drop vs the spike but <10% vs the median: the window
+    # is what makes --strict survivable.
+    cur = _csv(tmp_path, "cur.csv", [_row("er", "csr", 16, 2.0)])
+    argv = ["--previous"] + [str(p) for p in runs] + \
+        ["--current", str(cur), "--strict"]
+    assert pt.main(argv) == 0
+    # Against the spike alone the same run hard-fails.
+    assert pt.main(["--previous", str(runs[1]), "--current", str(cur),
+                    "--strict"]) == 1
 
 
 def test_main_disjoint_schemas(tmp_path, capsys):

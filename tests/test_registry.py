@@ -148,3 +148,42 @@ def test_context_resolves_b_tile_override():
         hardware=dataclasses.replace(HOST_CPU, vmem_bytes=2 ** 16))
     assert auto.resolve_b_tile(100_000) == \
         registry.choose_b_tile(100_000, 2 ** 16)
+
+
+def test_plan_d_repacks_b_slab():
+    """Per-d slab re-packing: small planned widths get taller B slabs.
+
+    The default bd=512 charges the VMEM budget for the widest d-tile;
+    a plan that knows d=8 hosts a 64x-narrower slab and so fits 64x the
+    rows (capped by n / whole-B residency).
+    """
+    tight = dataclasses.replace(HOST_CPU, vmem_bytes=2 ** 20)
+    n = 100_000
+    wide = registry.KernelContext(hardware=tight)              # bd=512
+    narrow = registry.KernelContext(hardware=tight, plan_d=8)  # bd=8
+    t_wide, t_narrow = wide.resolve_b_tile(n), narrow.resolve_b_tile(n)
+    assert t_wide is not None and t_narrow is not None
+    assert t_narrow == registry.choose_b_tile(n, 2 ** 20, bd=8)
+    assert t_narrow > t_wide
+    # plan_d=None preserves the legacy conservative sizing exactly.
+    assert t_wide == registry.choose_b_tile(n, 2 ** 20, bd=512)
+    # Non-power-of-two widths route through the kernel's actual d-tile.
+    d24 = registry.KernelContext(hardware=tight, plan_d=24)
+    assert d24.resolve_b_tile(n) == registry.choose_b_tile(
+        n, 2 ** 20, bd=registry.pallas_block_d(24))
+    # An explicit override still wins over the planned width.
+    forced = registry.KernelContext(hardware=tight, plan_d=8, b_tile=64)
+    assert forced.resolve_b_tile(n) == 64
+    # With a taller slab the whole-B threshold moves: a matrix that
+    # streams at bd=512 can be fully resident at bd=8.
+    n_small = registry.choose_b_tile(4096, 2 ** 20, bd=512)
+    assert n_small is not None                   # streams under wide tile
+    assert registry.KernelContext(hardware=tight,
+                                  plan_d=8).resolve_b_tile(4096) is None
+
+
+def test_registry_version_current():
+    """REGISTRY_VERSION gates calibration staleness; must be an int >= 2
+    (v2 introduced per-d slab re-packing)."""
+    assert isinstance(registry.REGISTRY_VERSION, int)
+    assert registry.REGISTRY_VERSION >= 2

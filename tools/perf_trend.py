@@ -9,20 +9,27 @@ The gate is a *soft warn* by default: regressions print as GitHub
 ``::warning::`` annotations and the exit code stays 0, because single
 cells on shared CI hosts swing well beyond 10% between identical runs
 (the same wall-clock noise the claim checks aggregate around).  Pass
-``--strict`` to turn regressions into a non-zero exit.
+``--strict`` to turn regressions into a non-zero exit (release branches
+/ manual bisection), and widen the baseline to a *trend window* by
+passing several artifacts — the baseline is then the per-cell median of
+the last N runs, which is what makes ``--strict`` usable at all: one
+lucky previous run no longer fails every following one.
 
     python tools/perf_trend.py \
-        --previous prev-artifact/smoke_spmm.csv \
-        --current benchmarks/out/smoke_spmm.csv
+        --previous run1/smoke_spmm.csv run2/smoke_spmm.csv \
+                   run3/smoke_spmm.csv \
+        --current benchmarks/out/smoke_spmm.csv --strict
 
 CSV schema: ``benchmarks.spmm_suite.CSV_HEADER`` (streamed rows append
-with the mode+reuse encoded in the impl column, e.g. ``stream_r8``).
+with the mode+reuse encoded in the impl column, e.g. ``stream_r8``;
+sharded rows with the tier, e.g. ``shard8_all_gather``).
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import pathlib
+import statistics
 import sys
 from typing import Dict, List, Tuple
 
@@ -40,6 +47,24 @@ def parse_csv(path: pathlib.Path) -> Dict[Key, float]:
             except (KeyError, TypeError, ValueError):
                 continue            # malformed/partial row: skip, don't die
     return rows
+
+
+def baseline_window(paths: List[pathlib.Path]) -> Dict[Key, float]:
+    """Per-cell median GFLOP/s across a window of baseline CSVs.
+
+    Each cell's baseline is the median over the artifacts that contain
+    it (new cells appear in fewer files while the window fills up).
+    Missing files are skipped — artifact fetches fail routinely — so the
+    window degrades gracefully down to single-file behaviour.
+    """
+    samples: Dict[Key, List[float]] = {}
+    for path in paths:
+        if not path.is_file():
+            print(f"perf-trend: baseline {path} missing, skipped")
+            continue
+        for key, gf in parse_csv(path).items():
+            samples.setdefault(key, []).append(gf)
+    return {k: statistics.median(v) for k, v in samples.items()}
 
 
 def compare(prev: Dict[Key, float], cur: Dict[Key, float],
@@ -63,8 +88,10 @@ def compare(prev: Dict[Key, float], cur: Dict[Key, float],
 def main(argv: List[str]) -> int:
     """Compare CSVs, print the trend report, return the exit code."""
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--previous", required=True,
-                    help="baseline CSV (last successful run's artifact)")
+    ap.add_argument("--previous", required=True, nargs="+",
+                    help="baseline CSV(s): pass several recent artifacts "
+                         "and each cell compares against its median over "
+                         "the window (one path = plain last-run diff)")
     ap.add_argument("--current", required=True,
                     help="this run's CSV")
     ap.add_argument("--threshold", type=float, default=0.10,
@@ -74,17 +101,17 @@ def main(argv: List[str]) -> int:
                     help="exit 1 on regressions instead of soft-warning")
     args = ap.parse_args(argv)
 
-    prev_path = pathlib.Path(args.previous)
-    if not prev_path.is_file():
-        print(f"perf-trend: no baseline at {prev_path} (first run, or "
-              f"artifact fetch failed); nothing to compare")
+    prev = baseline_window([pathlib.Path(p) for p in args.previous])
+    if not prev:
+        print("perf-trend: no readable baseline CSVs (first run, or "
+              "artifact fetch failed); nothing to compare")
         return 0
     cur_path = pathlib.Path(args.current)
     if not cur_path.is_file():
         print(f"perf-trend: current CSV missing at {cur_path}")
         return 1
 
-    prev, cur = parse_csv(prev_path), parse_csv(cur_path)
+    cur = parse_csv(cur_path)
     shared = prev.keys() & cur.keys()
     if not shared:
         print("perf-trend: no comparable cells between baseline and "
