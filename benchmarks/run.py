@@ -16,6 +16,12 @@
               sparse.plan(mesh=...) tier); rows appended to the SpMM CSV
               with the chosen B-strategy in the impl column.  Run under
               XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU.
+  engine      continuous-batching engine vs per-request sync replay
+              (repro.sparse.engine): per-request p50/p99 latency and
+              goodput per structure, written to its own latency CSV
+              (engine_smoke.csv / engine_table.csv — latency columns,
+              not the GFLOP/s schema).  ``--engine-smoke`` runs it alone
+              and enforces the coalescing-beats-sync goodput claim.
   kernels     Pallas kernel wall-time (interpret mode; correctness-scale)
   roofline    per-(arch x shape x mesh) three-term table from the dry-run
               records in experiments/dryrun (if present)
@@ -154,6 +160,32 @@ def bench_shard_suite(beta: float, *, scale: int, d_values,
         _emit(f"shard.claim.{k}", 0.0, "PASS" if v else "FAIL")
 
 
+def bench_engine_suite(beta: float, *, scale: int, d: int, streams: int,
+                       per_stream: int, repeats: int, csv_name: str,
+                       enforce: bool = False) -> None:
+    from benchmarks.stream import (
+        ENGINE_CSV_HEADER, engine_claims_check, engine_csv_rows,
+        run_engine_suite)
+    cells = run_engine_suite(beta, scale=scale, d=d, streams=streams,
+                             per_stream=per_stream, repeats=repeats)
+    os.makedirs("benchmarks/out", exist_ok=True)
+    # The engine lane gets its own CSV: latency/goodput columns, not the
+    # GFLOP/s schema the other lanes share.  tools/perf_trend.py trends
+    # it with --metric goodput_rps.
+    with open(os.path.join("benchmarks/out", csv_name), "w") as f:
+        f.write(ENGINE_CSV_HEADER + "\n" + "\n".join(engine_csv_rows(cells)))
+    for c in cells:
+        _emit(f"engine.{c.matrix}.{c.impl}.d{c.d}", c.p50_us,
+              f"p99={c.p99_us:.0f}us;goodput={c.goodput_rps:.1f}rps;"
+              f"batches={c.batches}")
+    claims = engine_claims_check(cells)
+    failed = [k for k, v in claims.items() if not v]
+    for k, v in claims.items():
+        _emit(f"engine.claim.{k}", 0.0, "PASS" if v else "FAIL")
+    if enforce and failed:
+        raise SystemExit(f"serving-engine claims failed: {failed}")
+
+
 def bench_kernels() -> None:
     import jax.numpy as jnp
     import numpy as np
@@ -208,6 +240,11 @@ def main() -> None:
     parser.add_argument("--smoke", action="store_true",
                         help="tiny-scale SpMM suite only (CI per-PR check); "
                              "writes benchmarks/out/smoke_spmm.csv")
+    parser.add_argument("--engine-smoke", action="store_true",
+                        help="engine-vs-sync serving lane only (CI engine "
+                             "smoke job); writes benchmarks/out/"
+                             "engine_smoke.csv and enforces the "
+                             "coalescing-beats-sync goodput claim")
     parser.add_argument("--calibrate", action="store_true",
                         help="fit + persist on-host per-format compute "
                              "ceilings before (or instead of) the suites; "
@@ -219,6 +256,11 @@ def main() -> None:
         bench_calibrate(beta)
         if not args.smoke:
             return
+    if args.engine_smoke:
+        bench_engine_suite(beta, scale=10, d=8, streams=4, per_stream=8,
+                           repeats=3, csv_name="engine_smoke.csv",
+                           enforce=True)
+        return
     if args.smoke:
         bench_spmm(beta, scale=11, d_values=(1, 16, 64), repeats=3,
                    csv_name="smoke_spmm.csv", dispatch_claims_only=True)
@@ -234,6 +276,8 @@ def main() -> None:
                        csv_name="table5_spmm.csv")
     bench_shard_suite(beta, scale=12, d_values=(16, 64), repeats=3,
                       csv_name="table5_spmm.csv")
+    bench_engine_suite(beta, scale=12, d=8, streams=4, per_stream=16,
+                       repeats=3, csv_name="engine_table.csv")
     bench_kernels()
     bench_roofline_table()
 

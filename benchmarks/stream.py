@@ -345,6 +345,162 @@ def shard_csv_rows(cells: List[ShardCell]) -> List[str]:
     return rows
 
 
+# --------------------------------------------------------------------------
+# Continuous-batching engine lane (docs/serving_engine.md).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineCell:
+    """One (matrix x impl) measurement of the engine-vs-sync lane.
+
+    Unlike the throughput-shaped cells above, this lane reports serving
+    SLOs: per-request submit-to-completion latency percentiles plus
+    goodput (served requests per second of serving span).
+    """
+
+    matrix: str
+    pattern: str
+    impl: str                 # "engine" | "sync"
+    d: int                    # per-request RHS width
+    nnz: int
+    streams: int              # concurrent logical request streams
+    requests: int             # total requests served
+    batches: int              # launches: engine micro-batches / sync calls
+    p50_us: float             # median per-request latency
+    p99_us: float
+    goodput_rps: float        # requests per second over the serving span
+
+
+#: Header for the engine lane's own CSV (latency columns don't fit the
+#: GFLOP/s-shaped ``spmm_suite.CSV_HEADER``; ``tools/perf_trend.py``
+#: trends this file with ``--metric goodput_rps``).
+ENGINE_CSV_HEADER = ("matrix,pattern,impl,d,nnz,streams,requests,"
+                     "batches,p50_us,p99_us,goodput_rps")
+
+
+def run_engine_suite(beta: float, *, scale: int = 10, d: int = 8,
+                     streams: int = 4, per_stream: int = 8,
+                     repeats: int = 3) -> List[EngineCell]:
+    """Engine-vs-sync serving comparison across the four structures.
+
+    The serving scenario the engine exists for: ``streams`` concurrent
+    request streams of *narrow* right-hand sides (``d`` columns each —
+    the per-request width of real serving traffic) with a reuse horizon
+    of ``per_stream`` requests per stream.  The engine side admits every
+    request up front (round-robin across streams, the queue depth a
+    bursty open-loop arrival process produces) and drains through
+    coalesced ``execute_wide`` micro-batches; the sync side replays the
+    identical request sequence one ``execute_wide`` + sync at a time —
+    exactly what ``serve.py --spmm-stream`` does per request today.
+
+    Both sides are warmed (launch-width size classes for the engine, the
+    per-request shape for sync) so jit compiles stay out of the
+    latencies, and both run ``repeats`` passes keeping the best-goodput
+    pass — the same best-of discipline as ``_best_of`` above.
+
+    Determinism note: the engine pass drives :meth:`ServingEngine.drain`
+    on the caller's thread (no worker thread, no arrival jitter), so the
+    coalescing decisions — and therefore CI's claim verdict — reproduce
+    across runs.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import sparse
+    from benchmarks.spmm_suite import make_dispatcher
+
+    total = streams * per_stream
+    results: List[EngineCell] = []
+    for name, gen in stream_matrices(scale).items():
+        m = gen()
+        seed = zlib.adler32(f"engine:{name}:{d}".encode()) % 2 ** 16
+        rng = np.random.default_rng(seed)
+        # Round-robin interleave so consecutive queue entries come from
+        # different streams, like concurrent arrivals would.
+        reqs = [jnp.asarray(rng.normal(size=(m.n, d)).astype(np.float32))
+                for _ in range(total)]
+        disp = make_dispatcher(beta)
+        plan = sparse.plan(
+            m, sparse.BSpec(d=d, reuse=total * repeats), dispatcher=disp)
+
+        engine = sparse.ServingEngine(
+            max_queue=2 * total, policy="wait", auto_replan=False)
+        engine.register("spmm", plan)
+        engine.warmup("spmm", max_cols=total * d)
+        jax.block_until_ready(plan.execute_wide(reqs[0]))   # sync shape
+        plan.reset_stats()
+
+        best_engine = None
+        for _ in range(repeats):
+            engine.reset_stats()
+            tickets = [engine.submit("spmm", b) for b in reqs]
+            engine.drain()
+            stats = engine.stats()
+            assert all(t.done() for t in tickets)
+            if (best_engine is None
+                    or stats["goodput_rps"] > best_engine["goodput_rps"]):
+                best_engine = stats
+        results.append(EngineCell(
+            matrix=name, pattern=m.pattern, impl="engine", d=d, nnz=m.nnz,
+            streams=streams, requests=total,
+            batches=best_engine["batches"],
+            p50_us=best_engine["p50_us"], p99_us=best_engine["p99_us"],
+            goodput_rps=best_engine["goodput_rps"]))
+
+        best_sync = None
+        for _ in range(repeats):
+            lats = []
+            t0 = time.perf_counter()
+            for b in reqs:
+                t1 = time.perf_counter()
+                jax.block_until_ready(plan.execute_wide(b))
+                lats.append(time.perf_counter() - t1)
+            span = time.perf_counter() - t0
+            goodput = total / max(span, 1e-12)
+            if best_sync is None or goodput > best_sync[0]:
+                best_sync = (goodput, lats)
+        sync_us = np.asarray(best_sync[1]) * 1e6
+        results.append(EngineCell(
+            matrix=name, pattern=m.pattern, impl="sync", d=d, nnz=m.nnz,
+            streams=streams, requests=total, batches=total,
+            p50_us=float(np.percentile(sync_us, 50)),
+            p99_us=float(np.percentile(sync_us, 99)),
+            goodput_rps=best_sync[0]))
+    return results
+
+
+def engine_claims_check(cells: List[EngineCell]) -> Dict[str, bool]:
+    """Engine-lane acceptance: coalescing must beat per-request sync.
+
+    The CI-gated claim (ISSUE 7 acceptance): at reuse >= 8 per stream
+    with >= 4 concurrent streams, coalesced ``execute_wide`` serving
+    beats per-request sync replay on goodput.  Aggregated over the four
+    structures — total requests over total serving span — the same
+    noise-tolerance argument as ``stream_claims_check``: single
+    structures swing with wall-clock spikes on shared hosts (banded's
+    small-nnz cells are within noise of sync), while the aggregate is
+    dominated by the structures coalescing actually helps.
+    """
+    spans = {"engine": 0.0, "sync": 0.0}
+    reqs = {"engine": 0, "sync": 0}
+    for c in cells:
+        if c.impl in spans and c.goodput_rps > 0:
+            spans[c.impl] += c.requests / c.goodput_rps
+            reqs[c.impl] += c.requests
+    ok = (reqs["engine"] > 0 and reqs["sync"] > 0
+          and spans["engine"] > 0
+          and reqs["engine"] / spans["engine"]
+          > reqs["sync"] / spans["sync"])
+    return {"engine_coalescing_beats_sync_goodput_at_reuse8_4streams": ok}
+
+
+def engine_csv_rows(cells: List[EngineCell]) -> List[str]:
+    """Render engine cells under :data:`ENGINE_CSV_HEADER` (no header)."""
+    return [f"{c.matrix},{c.pattern},{c.impl},{c.d},{c.nnz},{c.streams},"
+            f"{c.requests},{c.batches},{c.p50_us:.1f},{c.p99_us:.1f},"
+            f"{c.goodput_rps:.2f}"
+            for c in cells]
+
+
 if __name__ == "__main__":
     import pathlib
     import sys
@@ -362,3 +518,8 @@ if __name__ == "__main__":
         print(f"{sc.matrix:14s} {sc.impl:20s} d={sc.d:3d} "
               f"{sc.steady_s * 1e6:9.1f} us {sc.gflops:7.2f} GF/s "
               f"x{sc.speedup:.2f}")
+    for ec in run_engine_suite(bw["triad"], scale=10, repeats=1):
+        print(f"{ec.matrix:14s} {ec.impl:7s} d={ec.d:3d} "
+              f"x{ec.requests} in {ec.batches:3d} launches  "
+              f"p50={ec.p50_us:8.0f}us p99={ec.p99_us:8.0f}us  "
+              f"{ec.goodput_rps:8.1f} req/s")

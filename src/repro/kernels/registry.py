@@ -163,6 +163,24 @@ class KernelSpec:
     #: callers cache one layout for all of them (ELL's pallas pick lowers
     #: to the CSR kernel and reuses its row-tile packing verbatim).
     layout_key: Optional[str] = None
+    #: Execution metadata the serving engine (``repro.sparse.engine``)
+    #: consults when staging right-hand sides.
+    #:
+    #: ``async_dispatch``: ``run`` only *enqueues* the launch and returns
+    #: before the result materializes (every XLA-lowered kernel — jax
+    #: eager ops, jitted shard_map programs, and pallas_call all dispatch
+    #: asynchronously; completion is observed at ``block_until_ready``).
+    #: The engine overlaps host→device staging of the next micro-batch
+    #: with device compute of the current one only when this is set; a
+    #: synchronous host kernel would make that overlap a lie.
+    async_dispatch: bool = True
+    #: ``donate_b``: the launch may alias B's device buffer for its
+    #: output (``input_output_aliases`` / jit donation), so the caller
+    #: must treat the staged buffer as consumed at dispatch.  None of the
+    #: registered kernels alias B today — C has B's shape but every
+    #: kernel reads B throughout the launch — so the engine keeps its
+    #: staging buffer alive until materialization unless this flips.
+    donate_b: bool = False
 
     @property
     def key(self) -> Tuple[str, str]:

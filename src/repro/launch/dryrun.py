@@ -83,6 +83,7 @@ def input_specs(cfg, shape):
 
 
 def abstract_state(cfg, shape, kind):
+    """Abstract (shape-only) params + decode cache via ``jax.eval_shape``."""
     params = jax.eval_shape(lambda k: M.init_params(cfg, k),
                             jax.random.PRNGKey(0))
     if kind != "decode":
@@ -116,6 +117,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              grad_accum: int = 0, verbose: bool = True,
              causal_impl: str = "masked",
              chunked_loss: bool = False) -> dict:
+    """Trace one (arch, shape, mesh) cell and return its dry-run record.
+
+    Compiles nothing and allocates no real arrays: the step function is
+    traced over abstract state on a production mesh, and the record
+    carries the HLO cost analysis plus the sparse-component metadata the
+    roofline analyzer consumes (``benchmarks/run.py`` roofline section).
+    """
     from repro.models import attention as ATT
     ATT.set_causal_impl(causal_impl)
     cfg = get_config(arch)
@@ -195,11 +203,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def record_path(out_dir, arch, shape_name, multi_pod):
+    """Path the dry-run record for one cell is written to / read from."""
     tag = "pod2" if multi_pod else "pod1"
     return os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.json")
 
 
 def main():
+    """Run one dry-run cell (or --all) and write the JSON records."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

@@ -23,6 +23,18 @@ the B-distribution strategy audit (``docs/sharding.md``):
     PYTHONPATH=src python -m repro.launch.serve --spmm-stream \
         --spmm-shards -1 --spmm-structure moe-block
 
+``--engine`` serves the same operator through the continuous-batching
+engine (``repro.sparse.engine``): a synthetic open-loop arrival process
+plays ``--engine-streams`` concurrent request streams with mixed
+d-widths into the bounded queue, the worker thread coalesces compatible
+requests into shared ``execute_wide`` calls, and the report adds
+per-request p50/p99 latency and goodput next to an engine-vs-sync
+comparison (``docs/serving_engine.md``):
+
+    PYTHONPATH=src python -m repro.launch.serve --engine \
+        --spmm-structure moe-block --spmm-n 4096 --spmm-d 64 \
+        --engine-streams 4 --engine-requests 64 --engine-rate 2000
+
 ``--calibrate`` runs the on-host compute-ceiling calibration
 (``repro.core.calibrate``) at startup and persists it, so the serving
 plan predicts from measured ``(peak_fraction, d_half)`` ceilings.
@@ -184,6 +196,116 @@ def serve_spmm_stream(args) -> None:
     print(f"stats: {plan.stats()}")
 
 
+def serve_spmm_engine(args) -> None:
+    """Serve an open-loop arrival process through the serving engine.
+
+    ``--engine-streams`` synthetic clients each submit
+    ``--engine-requests`` right-hand sides with exponential
+    inter-arrival gaps (open loop: arrivals don't wait for completions,
+    so the queue actually exercises coalescing and backpressure).
+    Stream widths alternate ``d`` and ``d // 2`` to show mixed-width
+    coalescing.  After the engine drains, the same request sequence is
+    replayed through synchronous per-request ``plan.execute`` calls and
+    both sides report p50/p99 per-request latency and goodput
+    (``docs/serving_engine.md`` walks through one of these transcripts).
+    """
+    import threading
+
+    from repro import sparse
+
+    m = build_stream_matrix(args.spmm_structure, args.spmm_n)
+    streams = max(args.engine_streams, 1)
+    per_stream = max(args.engine_requests // streams, 1)
+    rate = max(args.engine_rate, 1e-9)      # requests/s per stream
+
+    def width(stream: int) -> int:
+        return args.spmm_d if stream % 2 == 0 else max(args.spmm_d // 2, 1)
+
+    # Pre-draw every operand so generation cost stays out of both timings.
+    rng = np.random.default_rng(1)
+    reqs = [[jnp.asarray(rng.normal(size=(m.n, width(s)))
+                         .astype(np.float32)) for _ in range(per_stream)]
+            for s in range(streams)]
+    gaps = [[rng.exponential(1.0 / rate) for _ in range(per_stream)]
+            for _ in range(streams)]
+    total = streams * per_stream
+
+    t0 = time.perf_counter()
+    plan = sparse.plan(m, sparse.BSpec(d=args.spmm_d, reuse=total))
+    jax.block_until_ready(plan.execute(reqs[0][0]))   # bind + compile
+    plan.reset_stats()
+
+    engine = sparse.ServingEngine(
+        max_queue=args.engine_queue, policy=args.engine_policy)
+    engine.register("spmm", plan)
+    # Prime every coalesced launch width the run can reach, so jit
+    # compiles land in startup instead of inside request latencies.
+    worst_case_cols = sum(b.shape[1] for stream in reqs for b in stream)
+    warmed = engine.warmup("spmm", max_cols=worst_case_cols)
+    startup_s = time.perf_counter() - t0
+    engine.start()
+
+    def client(stream: int, tickets: list) -> None:
+        for gap, b in zip(gaps[stream], reqs[stream]):
+            time.sleep(gap)
+            try:
+                tickets.append(engine.submit("spmm", b))
+            except sparse.ShedError:
+                pass                        # counted in engine.stats()
+
+    tickets: list = []
+    per_client: list = [[] for _ in range(streams)]
+    threads = [threading.Thread(target=client, args=(s, per_client[s]))
+               for s in range(streams)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    for lst in per_client:
+        tickets.extend(lst)
+    for t in tickets:
+        t.result(timeout=120.0)
+    engine.stop()
+    stats = engine.stats()
+
+    # Sync baseline: per-request replay of the identical sequence on the
+    # same plan, one block_until_ready per request.  Warm each distinct
+    # request width first — the engine got its launch widths warmed at
+    # startup, so the baseline gets the same courtesy.
+    for w in sorted({b.shape[1] for stream in reqs for b in stream}):
+        jax.block_until_ready(
+            plan.execute_wide(jnp.zeros((m.n, w), jnp.float32)))
+    plan.reset_stats()
+    sync_lat = []
+    t_sync0 = time.perf_counter()
+    for s in range(streams):
+        for b in reqs[s]:
+            t1 = time.perf_counter()
+            jax.block_until_ready(plan.execute_wide(b))
+            sync_lat.append(time.perf_counter() - t1)
+    sync_span = time.perf_counter() - t_sync0
+    sync_us = np.asarray(sync_lat) * 1e6
+    sync_goodput = len(sync_lat) / max(sync_span, 1e-12)
+
+    print(plan.dispatch.summary())
+    print(f"engine serving {args.spmm_structure} [{m.n}x{m.n}, "
+          f"nnz={m.nnz}]: {streams} streams x {per_stream} requests, "
+          f"widths d={args.spmm_d}/{max(args.spmm_d // 2, 1)}, "
+          f"open-loop rate {rate:.0f} req/s/stream, "
+          f"queue={args.engine_queue} policy={args.engine_policy}")
+    print(f"startup (classify+plan+convert+compile, {warmed} launch "
+          f"widths warmed): {startup_s * 1e3:.1f} ms")
+    print(engine.summary())
+    print(f"sync per-request replay of the same {len(sync_lat)} requests: "
+          f"p50={np.percentile(sync_us, 50):.0f}us "
+          f"p99={np.percentile(sync_us, 99):.0f}us "
+          f"goodput={sync_goodput:.1f} req/s")
+    if stats["goodput_rps"] > 0:
+        print(f"engine vs sync goodput: {stats['goodput_rps']:.1f} vs "
+              f"{sync_goodput:.1f} req/s "
+              f"({stats['goodput_rps'] / max(sync_goodput, 1e-12):.2f}x)")
+
+
 def main():
     """Parse arguments and run either the LM or the streamed-SpMM server."""
     ap = argparse.ArgumentParser()
@@ -208,6 +330,24 @@ def main():
                          "devices (-1 = all visible); on CPU export "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N first")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "(repro.sparse.engine): open-loop concurrent "
+                         "clients, bounded queue, coalesced execute_wide "
+                         "batches, p50/p99 + goodput report vs a sync "
+                         "per-request baseline")
+    ap.add_argument("--engine-streams", type=int, default=4,
+                    help="concurrent synthetic client streams")
+    ap.add_argument("--engine-requests", type=int, default=64,
+                    help="total requests across all streams")
+    ap.add_argument("--engine-rate", type=float, default=2000.0,
+                    help="open-loop arrival rate per stream (requests/s)")
+    ap.add_argument("--engine-queue", type=int, default=256,
+                    help="bounded admission-queue depth")
+    ap.add_argument("--engine-policy", choices=("wait", "shed"),
+                    default="wait",
+                    help="backpressure when the queue is full: block the "
+                         "submitter ('wait') or reject ('shed')")
     ap.add_argument("--calibrate", action="store_true",
                     help="run the on-host ceiling calibration at startup; "
                          "the serving plan then predicts from measured "
@@ -216,11 +356,15 @@ def main():
 
     if args.calibrate:
         run_startup_calibration()
+    if args.engine:
+        serve_spmm_engine(args)
+        return
     if args.spmm_stream:
         serve_spmm_stream(args)
         return
     if not args.arch:
-        ap.error("--arch is required unless --spmm-stream is set")
+        ap.error("--arch is required unless --spmm-stream or --engine "
+                 "is set")
 
     from repro.configs.base import get_config
     from repro.models import model as M

@@ -162,6 +162,7 @@ def activation_rules(cfg: ModelConfig, mesh, shape: ShapeConfig) -> Dict:
 
 
 def batch_pspecs(cfg: ModelConfig, mesh, shape: ShapeConfig) -> Dict:
+    """PartitionSpecs for one batch's arrays (tokens/labels/modalities)."""
     dp, _ = dp_axes_for_batch(mesh, shape.global_batch)
     dp = _maybe(dp)
     specs = {"tokens": P(dp, None)}
@@ -211,6 +212,7 @@ def cache_pspecs(cfg: ModelConfig, mesh, shape: ShapeConfig,
 # ---------------------------------------------------------------------------
 
 def named(mesh, spec_tree):
+    """Map a PartitionSpec tree to ``NamedSharding``s on ``mesh``."""
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda s: isinstance(s, P))

@@ -23,6 +23,7 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 
 def main():
+    """Train an arch/shape cell from the CLI (see module docstring)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default="train_4k")

@@ -27,6 +27,9 @@ from repro.sparse.stream import BSpec, StreamPlan, as_b_spec, plan
 from repro.sparse.shard import (
     B_STRATEGIES, ShardedPlan, ShardStrategyEval,
 )
+from repro.sparse.engine import (
+    BatchRecord, ServingEngine, ShedError, Ticket, coalesce_budget,
+)
 
 __all__ = [
     "BCSRMatrix", "CSRMatrix", "DIAMatrix", "ELLMatrix",
@@ -38,4 +41,6 @@ __all__ = [
     "default_dispatcher", "plan_spmm", "spmm",
     "BSpec", "StreamPlan", "as_b_spec", "plan",
     "B_STRATEGIES", "ShardedPlan", "ShardStrategyEval",
+    "BatchRecord", "ServingEngine", "ShedError", "Ticket",
+    "coalesce_budget",
 ]

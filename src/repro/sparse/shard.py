@@ -627,6 +627,34 @@ class ShardedPlan(_stream.StreamPlan):
         })
         return out
 
+    def exec_hints(self) -> dict:
+        """Engine staging metadata for sharded replay.
+
+        The shard_map program is jitted, so dispatch is asynchronous like
+        every other backend — but the operand is re-laid-out inside the
+        traced closure (padded, chunked, or all-gathered per strategy),
+        so donating the caller's staged buffer never helps: the hints pin
+        ``donate_b`` False regardless of the per-shard kernel, and the
+        jax-backend spec that actually runs inside each shard is the one
+        consulted (``ShardedPlan`` executes jax kernels per shard even
+        when the single-device plan resolved pallas).
+        """
+        from repro.kernels import registry
+        spec = registry.get(self.dispatch.chosen, "jax")
+        return {"async_dispatch": spec.async_dispatch, "donate_b": False,
+                "devices": self.num_shards}
+
+    def coalesce_block_d(self, total_cols: int) -> int:
+        """Coalesced replay width for the engine: always the planned d.
+
+        Every distinct operand width compiles a fresh shard_map program
+        (the closure is jitted over concrete shapes), so an engine whose
+        micro-batches vary in total width would recompile per batch.
+        Pinning the block to ``spec.d`` keeps one compiled program serving
+        every batch — the engine pads the batch to a multiple of it.
+        """
+        return self.spec.d
+
     def replan(self, observed_reuse: int) -> "ShardedPlan":
         """Re-plan at an observed horizon, keeping the mesh (see
         ``StreamPlan.replan``)."""

@@ -183,6 +183,57 @@ class StreamPlan:
         self._audit_reuse()
         return out
 
+    def execute_async(self, b: jnp.ndarray) -> jnp.ndarray:
+        """Dispatch one planned-width batch without a sync point.
+
+        Identical to :meth:`execute` except the caller owns the sync:
+        the returned array is an in-flight device value (XLA dispatches
+        asynchronously; see ``KernelSpec.async_dispatch``), so the host
+        is free to stage the next operand while the device computes —
+        the overlap the serving engine (``repro.sparse.engine``) builds
+        its double buffering on.  Materialize with
+        ``jax.block_until_ready``.
+
+        Args:
+            b: dense right-hand side, ``[n, spec.d]``.
+
+        Returns:
+            ``C`` as an un-materialized ``[n, spec.d]`` device array.
+        """
+        self._check(b, width=self.spec.d)
+        out = self._run(b)
+        self.executed += 1
+        self._audit_reuse()
+        return out
+
+    def execute_many_async(self, bs: Union[jnp.ndarray, Sequence[jnp.ndarray],
+                                           Iterable[jnp.ndarray]]) -> list:
+        """Dispatch a whole stream with no sync point and no stacking.
+
+        The async counterpart of :meth:`execute_many` (ROADMAP's async
+        ``execute_many``): every batch is enqueued back-to-back so the
+        device pipeline stays full, and the un-materialized per-batch
+        results come back as a list — no ``jnp.stack`` barrier forcing a
+        layout copy before the caller even needs the values.
+
+        Args:
+            bs: a stacked ``[k, n, d]`` array or an iterable of ``k``
+                arrays of shape ``[n, d]``.
+
+        Returns:
+            List of ``k`` in-flight ``[n, d]`` device arrays; call
+            ``jax.block_until_ready`` on them (or on the list) to wait.
+        """
+        if hasattr(bs, "ndim") and getattr(bs, "ndim", 0) == 3:
+            bs = [bs[i] for i in range(bs.shape[0])]
+        outs = []
+        for b in bs:
+            self._check(b, width=self.spec.d)
+            outs.append(self._run(b))
+            self.executed += 1
+        self._audit_reuse()
+        return outs
+
     def execute_many(self, bs: Union[jnp.ndarray, Sequence[jnp.ndarray],
                                      Iterable[jnp.ndarray]]) -> jnp.ndarray:
         """Replay the bound kernel across a stream of right-hand sides.
@@ -252,6 +303,70 @@ class StreamPlan:
         spec = dataclasses.replace(self.spec, reuse=observed_reuse)
         return StreamPlan(self._dispatcher, self._m, spec,
                           strategy=self._strategy)
+
+    def maybe_replan(self) -> Optional["StreamPlan"]:
+        """The mid-stream re-plan hook: a fresh plan when the audit fired.
+
+        Returns ``None`` while the planned horizon still holds.  Once the
+        realized reuse drifts past ``REUSE_DRIFT_FACTOR`` (the same
+        condition that flips ``stats()["replan_suggested"]``), returns
+        :meth:`replan` at the observed horizon — a fully bound plan whose
+        format choice reflects the stream actually being served.  The
+        caller swaps atomically (both plans stay valid; the serving
+        engine does this between micro-batches, never mid-batch).
+        """
+        if not self._reuse_warned:
+            return None
+        return self.replan(max(self.executed, 1))
+
+    def exec_hints(self) -> dict:
+        """Execution metadata for the serving engine's staging policy.
+
+        Resolved from the bound :class:`repro.kernels.registry.KernelSpec`:
+        ``async_dispatch`` (the launch enqueues and returns, so staging
+        the next micro-batch overlaps device compute) and ``donate_b``
+        (the launch may alias B's buffer, so the staged operand is
+        consumed at dispatch).  See the field docs on ``KernelSpec``.
+        """
+        from repro.kernels import registry
+        spec = registry.get(self.dispatch.chosen, self.dispatch.backend)
+        return {"async_dispatch": spec.async_dispatch,
+                "donate_b": spec.donate_b}
+
+    def coalesce_block_d(self, total_cols: int) -> int:
+        """Widest per-launch column block a coalesced batch may replay at.
+
+        jax-backend kernels adapt their operand width per call and carry
+        no resident-VMEM model, so a whole coalesced micro-batch can run
+        as one launch — the engine's throughput win.  The width is
+        *quantized* to a power-of-two multiple of the planned ``spec.d``
+        rather than the raw column count: every distinct launch width
+        jit-compiles its own program, and un-quantized micro-batches
+        (whose widths vary with arrival timing) would recompile on
+        nearly every batch — ~200 ms a time, swamping the coalescing
+        win.  Size classes keep the compiled-shape set logarithmic, and
+        the engine's warm-up primes them.  Pallas layouts were packed
+        for the planned width (``resolve_b_tile``'s per-d B-slab
+        re-packing sized the VMEM slab for ``plan_d = spec.d``), so
+        their replay stays at planned-width blocks: a wider launch would
+        burst the slab budget the layout was built against.
+
+        Args:
+            total_cols: the coalesced batch's total column count.
+
+        Returns:
+            The ``block_d`` to pass to :meth:`execute_wide` (the engine
+            pads the batch to a multiple of it, keeping launch shapes
+            from proliferating).
+        """
+        if self.dispatch.backend == "jax":
+            d = max(self.spec.d, 1)
+            blocks = -(-max(int(total_cols), 1) // d)   # ceil-div
+            size = 1
+            while size < blocks:
+                size *= 2
+            return size * d
+        return self.spec.d
 
     def execute_wide(self, b: jnp.ndarray,
                      *, block_d: Optional[int] = None) -> jnp.ndarray:

@@ -2,9 +2,10 @@
 
 These tests keep docs/ honest without a docs build: every module the
 architecture guide names must exist, every intra-repo link must resolve
-(same checker CI runs), and src/repro/sparse/ must stay clean under the
-missing-docstring pydocstyle subset wired into ruff (mirrored here in AST
-form so it is enforced even where ruff isn't installed).
+(same checker CI runs), and src/repro/sparse/ + src/repro/launch/ must
+stay clean under the missing-docstring pydocstyle subset wired into ruff
+(mirrored here in AST form so it is enforced even where ruff isn't
+installed).
 """
 import ast
 import importlib.util
@@ -29,7 +30,7 @@ def _load_check_links():
 
 def test_docs_exist():
     for name in ("architecture.md", "roofline.md", "serving.md",
-                 "sharding.md"):
+                 "serving_engine.md", "sharding.md"):
         assert (DOCS / name).is_file(), f"docs/{name} missing"
 
 
@@ -154,13 +155,16 @@ def _public_defs_missing_docstrings(tree):
 
 
 def test_sparse_package_docstring_clean():
-    """Mirror of the ruff D100-D104 gate on src/repro/sparse/ (CI lints it
-    with ruff; this keeps the gate active in ruff-less environments)."""
+    """Mirror of the ruff D100-D104 gate on src/repro/sparse/ and
+    src/repro/launch/ (CI lints them with ruff; this keeps the gate
+    active in ruff-less environments)."""
     failures = []
-    for path in sorted((ROOT / "src" / "repro" / "sparse").glob("*.py")):
-        tree = ast.parse(path.read_text(encoding="utf-8"))
-        if ast.get_docstring(tree) is None:
-            failures.append(f"{path.name}: module docstring")
-        failures += [f"{path.name}: {q}"
-                     for q in _public_defs_missing_docstrings(tree)]
-    assert not failures, f"missing docstrings in repro.sparse: {failures}"
+    for pkg in ("sparse", "launch"):
+        for path in sorted((ROOT / "src" / "repro" / pkg).glob("*.py")):
+            rel = f"{pkg}/{path.name}"
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+            if ast.get_docstring(tree) is None:
+                failures.append(f"{rel}: module docstring")
+            failures += [f"{rel}: {q}"
+                         for q in _public_defs_missing_docstrings(tree)]
+    assert not failures, f"missing docstrings: {failures}"

@@ -1,0 +1,269 @@
+"""Serving engine (repro.sparse.engine): coalescing, backpressure,
+latency accounting.
+
+The engine's single-threaded core (``submit`` / ``step`` / ``drain``)
+is driven here with an injected fake clock, so the latency and goodput
+arithmetic is pinned against hand-computed values instead of wall-clock
+noise; the worker thread gets one end-to-end smoke test.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.core import blocked
+
+N = 256
+
+
+class FakeClock:
+    """Injectable monotonic clock: advances only when the test says so."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def tick(self, dt):
+        self.t += dt
+
+
+def _mat(seed=3):
+    return blocked(N, t=32, num_blocks=8, nnz_per_block=64, seed=seed)
+
+
+def _b(d, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+
+
+def _engine(plan=None, **kw):
+    kw.setdefault("clock", FakeClock())
+    eng = sparse.ServingEngine(**kw)
+    if plan is None:
+        plan = sparse.plan(_mat(), sparse.BSpec(d=8, reuse=1024))
+    eng.register("spmm", plan)
+    return eng
+
+
+# --------------------------------------------------------------------- #
+# Numerics: coalesced batches must match per-request execution exactly.
+# --------------------------------------------------------------------- #
+
+def test_engine_matches_per_request_execution():
+    """Acceptance: mixed-width coalesced serving == per-call spmm."""
+    m = _mat()
+    eng = _engine(plan=sparse.plan(m, sparse.BSpec(d=8, reuse=64)))
+    bs = [_b(8, seed=0), _b(4, seed=1), _b(8, seed=2), _b(4, seed=3)]
+    tickets = [eng.submit("spmm", b) for b in bs]
+    assert eng.drain() == len(bs)
+    for tk, b in zip(tickets, bs):
+        got = tk.result(timeout=0)
+        assert got.shape == (N, b.shape[1])
+        ref = sparse.spmm(m, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    # All four shared one launch: coalescing, not width, did the batching.
+    assert eng.stats()["batches"] == 1
+    assert eng.stats()["coalesced"] == 4
+
+
+# --------------------------------------------------------------------- #
+# Coalescing invariants: operator purity, budget, FIFO.
+# --------------------------------------------------------------------- #
+
+def test_batches_never_mix_operators_and_respect_budget():
+    eng = _engine(max_batch_cols=16, double_buffer=False)
+    eng.register("other", sparse.plan(_mat(seed=7),
+                                      sparse.BSpec(d=8, reuse=64)))
+    order = ["spmm", "other", "spmm", "other", "spmm", "spmm", "other"]
+    for i, op in enumerate(order):
+        eng.submit(op, _b(8, seed=i))
+    assert eng.drain() == len(order)
+    assert len(eng.batch_log) >= 4       # 16-col budget = 2 requests max
+    for rec in eng.batch_log:
+        assert sum(rec.widths) <= 16
+        assert len(set(rec.request_ids)) == len(rec.request_ids)
+    # FIFO within each operator: ids in admission order batch over batch.
+    for op in ("spmm", "other"):
+        ids = [rid for rec in eng.batch_log if rec.operator == op
+               for rid in rec.request_ids]
+        assert ids == sorted(ids)
+    served_ids = sorted(rid for rec in eng.batch_log
+                        for rid in rec.request_ids)
+    assert served_ids == list(range(len(order)))
+
+
+def test_head_of_queue_anchors_the_batch():
+    """The queue head is always in the next batch — no operator starves."""
+    eng = _engine(double_buffer=False)
+    eng.register("other", sparse.plan(_mat(seed=7),
+                                      sparse.BSpec(d=8, reuse=64)))
+    eng.submit("other", _b(8, seed=0))
+    for i in range(3):
+        eng.submit("spmm", _b(8, seed=1 + i))
+    eng.step()
+    first = eng.batch_log[-1]
+    assert first.operator == "other" and first.request_ids == (0,)
+    eng.drain()
+    assert eng.stats()["served"] == 4
+
+
+def test_budget_floors_at_planned_width():
+    """A planned-width request is always servable, whatever the cap."""
+    eng = _engine(max_batch_cols=1)
+    assert eng.budget_for("spmm") == 8
+    t = eng.submit("spmm", _b(8))
+    eng.drain()
+    assert t.result(timeout=0).shape == (N, 8)
+
+
+def test_coalesce_budget_properties():
+    plan = sparse.plan(_mat(), sparse.BSpec(d=8, reuse=64))
+    small = sparse.coalesce_budget(plan, stage_bytes=1)
+    assert small == plan.spec.d          # floored at the planned width
+    big = sparse.coalesce_budget(plan, stage_bytes=8 * 2 ** 20)
+    assert big >= small and big % plan.spec.d == 0
+    assert big == (8 * 2 ** 20 // (plan.n * 4)) // 8 * 8
+
+
+# --------------------------------------------------------------------- #
+# Backpressure: bounded queue, shed vs wait.
+# --------------------------------------------------------------------- #
+
+def test_shed_policy_rejects_at_admission():
+    eng = _engine(max_queue=2, policy="shed")
+    eng.submit("spmm", _b(8, seed=0))
+    eng.submit("spmm", _b(8, seed=1))
+    with pytest.raises(sparse.ShedError):
+        eng.submit("spmm", _b(8, seed=2))
+    s = eng.stats()
+    assert s["admitted"] == 2 and s["shed"] == 1
+    assert eng.drain() == 2              # admitted requests still serve
+
+
+def test_wait_policy_timeout_sheds():
+    eng = _engine(max_queue=1, policy="wait")
+    eng.submit("spmm", _b(8, seed=0))
+    with pytest.raises(sparse.ShedError):
+        eng.submit("spmm", _b(8, seed=1), timeout=0.01)
+    assert eng.stats()["shed"] == 1
+
+
+def test_bad_submissions_raise():
+    eng = _engine()
+    with pytest.raises(KeyError):
+        eng.submit("nope", _b(8))
+    with pytest.raises(ValueError):
+        eng.submit("spmm", jnp.zeros((N + 1, 8), jnp.float32))
+    with pytest.raises(ValueError):
+        sparse.ServingEngine(policy="drop")
+    with pytest.raises(ValueError):
+        sparse.ServingEngine(max_queue=0)
+
+
+# --------------------------------------------------------------------- #
+# Latency accounting: hand-computed percentiles and goodput.
+# --------------------------------------------------------------------- #
+
+def test_latency_and_goodput_match_hand_computed_values():
+    clock = FakeClock()
+    eng = _engine(clock=clock, double_buffer=False)
+    # r0 at t=0 with a deadline it will miss; r1 at t=0.5; batch at t=1.
+    t0 = eng.submit("spmm", _b(8, seed=0), deadline_s=0.4)
+    clock.tick(0.5)
+    t1 = eng.submit("spmm", _b(8, seed=1))
+    clock.tick(0.5)
+    assert eng.step() == 2
+    assert t0.latency_s == pytest.approx(1.0)
+    assert t1.latency_s == pytest.approx(0.5)
+    assert t0.met_deadline is False and t1.met_deadline is None
+    s = eng.stats()
+    lats_us = [0.5e6, 1.0e6]
+    assert s["p50_us"] == pytest.approx(np.percentile(lats_us, 50))
+    assert s["p99_us"] == pytest.approx(np.percentile(lats_us, 99))
+    # Goodput: 1 deadline-meeting completion over the 1s span.
+    assert s["deadline_miss"] == 1
+    assert s["goodput_rps"] == pytest.approx(1.0)
+    rec = eng.batch_log[-1]
+    assert rec.queued_s == pytest.approx(1.0)    # oldest member waited 1s
+    assert rec.exec_s == pytest.approx(0.0)
+    assert t0.batch_seq == t1.batch_seq == 0
+
+
+def test_reset_stats_clears_accounting_only():
+    eng = _engine()
+    eng.submit("spmm", _b(8))
+    eng.drain()
+    assert eng.stats()["served"] == 1
+    eng.reset_stats()
+    s = eng.stats()
+    assert s["served"] == s["batches"] == 0
+    assert s["p50_us"] == s["goodput_rps"] == 0.0
+    t = eng.submit("spmm", _b(8))        # plans + id numbering survive
+    eng.drain()
+    assert t.id == 1 and eng.stats()["served"] == 1
+
+
+# --------------------------------------------------------------------- #
+# Warm-up, re-plan swap, summary.
+# --------------------------------------------------------------------- #
+
+def test_warmup_primes_size_classes_without_skewing_reuse():
+    eng = _engine()
+    warmed = eng.warmup("spmm")
+    assert warmed >= 1
+    assert eng.plan_for("spmm").executed == 0
+    assert eng.stats()["served"] == 0
+
+
+def test_auto_replan_swaps_plan_atomically():
+    plan = sparse.plan(_mat(), sparse.BSpec(d=8, reuse=1))
+    eng = _engine(plan=plan, max_batch_cols=8, double_buffer=False,
+                  auto_replan=True)
+    for i in range(6):                   # single-request batches drift
+        eng.submit("spmm", _b(8, seed=i))
+    eng.drain()
+    assert eng.stats()["replans"] >= 1
+    fresh = eng.plan_for("spmm")
+    assert fresh is not plan
+    assert fresh.spec.reuse >= plan.spec.reuse
+    t = eng.submit("spmm", _b(8))        # fresh plan serves
+    eng.drain()
+    assert t.result(timeout=0).shape == (N, 8)
+
+
+def test_summary_renders_batch_log():
+    eng = _engine()
+    eng.submit("spmm", _b(8, seed=0))
+    eng.submit("spmm", _b(4, seed=1))
+    eng.drain()
+    text = eng.summary()
+    assert "admitted=2" in text and "batch " in text
+    assert "widths=[8, 4]" in text
+
+
+# --------------------------------------------------------------------- #
+# Worker thread: end-to-end smoke (real clock, real threads).
+# --------------------------------------------------------------------- #
+
+def test_worker_thread_serves_submissions():
+    import time
+    eng = sparse.ServingEngine(max_queue=4, policy="wait")
+    eng.register("spmm", sparse.plan(_mat(), sparse.BSpec(d=8, reuse=64)))
+    eng.warmup("spmm")
+    eng.start()
+    eng.start()                          # idempotent
+    try:
+        bs = [_b(8, seed=s) for s in range(8)]   # > max_queue: wait kicks in
+        tickets = [eng.submit("spmm", b) for b in bs]
+        outs = [t.result(timeout=120.0) for t in tickets]
+    finally:
+        eng.stop(timeout=120.0)
+    for out, b in zip(outs, bs):
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(sparse.spmm(_mat(), b)),
+            rtol=1e-5, atol=1e-5)
+    assert eng.stats()["served"] == 8 and eng.pending() == 0

@@ -22,7 +22,14 @@ lucky previous run no longer fails every following one.
 
 CSV schema: ``benchmarks.spmm_suite.CSV_HEADER`` (streamed rows append
 with the mode+reuse encoded in the impl column, e.g. ``stream_r8``;
-sharded rows with the tier, e.g. ``shard8_all_gather``).
+sharded rows with the tier, e.g. ``shard8_all_gather``).  The serving
+engine's latency CSV (``benchmarks.stream.ENGINE_CSV_HEADER``) trends
+through the same tool with ``--metric goodput_rps`` — any
+higher-is-better column keyed by (matrix, impl, d) works:
+
+    python tools/perf_trend.py --metric goodput_rps \
+        --previous run1/engine_smoke.csv run2/engine_smoke.csv \
+        --current benchmarks/out/engine_smoke.csv
 """
 from __future__ import annotations
 
@@ -36,21 +43,23 @@ from typing import Dict, List, Tuple
 Key = Tuple[str, str, str]          # (matrix, impl, d)
 
 
-def parse_csv(path: pathlib.Path) -> Dict[Key, float]:
-    """Read one smoke/table5 CSV into ``(matrix, impl, d) -> gflops``."""
+def parse_csv(path: pathlib.Path,
+              metric: str = "gflops") -> Dict[Key, float]:
+    """Read one benchmark CSV into ``(matrix, impl, d) -> metric``."""
     rows: Dict[Key, float] = {}
     with open(path, newline="", encoding="utf-8") as f:
         for rec in csv.DictReader(f):
             try:
                 rows[(rec["matrix"], rec["impl"], rec["d"])] = float(
-                    rec["gflops"])
+                    rec[metric])
             except (KeyError, TypeError, ValueError):
                 continue            # malformed/partial row: skip, don't die
     return rows
 
 
-def baseline_window(paths: List[pathlib.Path]) -> Dict[Key, float]:
-    """Per-cell median GFLOP/s across a window of baseline CSVs.
+def baseline_window(paths: List[pathlib.Path],
+                    metric: str = "gflops") -> Dict[Key, float]:
+    """Per-cell median metric value across a window of baseline CSVs.
 
     Each cell's baseline is the median over the artifacts that contain
     it (new cells appear in fewer files while the window fills up).
@@ -62,7 +71,7 @@ def baseline_window(paths: List[pathlib.Path]) -> Dict[Key, float]:
         if not path.is_file():
             print(f"perf-trend: baseline {path} missing, skipped")
             continue
-        for key, gf in parse_csv(path).items():
+        for key, gf in parse_csv(path, metric).items():
             samples.setdefault(key, []).append(gf)
     return {k: statistics.median(v) for k, v in samples.items()}
 
@@ -71,7 +80,7 @@ def compare(prev: Dict[Key, float], cur: Dict[Key, float],
             threshold: float) -> List[Tuple[Key, float, float, float]]:
     """Cells regressing by more than ``threshold`` (fractional drop).
 
-    Returns ``(key, prev_gflops, cur_gflops, drop)`` sorted by worst
+    Returns ``(key, prev_value, cur_value, drop)`` sorted by worst
     drop first; only keys present in both CSVs are compared.
     """
     out = []
@@ -99,9 +108,14 @@ def main(argv: List[str]) -> int:
                          "regression (default 0.10)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on regressions instead of soft-warning")
+    ap.add_argument("--metric", default="gflops",
+                    help="CSV column to trend (higher is better); "
+                         "'gflops' for the SpMM CSVs, 'goodput_rps' for "
+                         "the engine latency CSV")
     args = ap.parse_args(argv)
 
-    prev = baseline_window([pathlib.Path(p) for p in args.previous])
+    prev = baseline_window([pathlib.Path(p) for p in args.previous],
+                           args.metric)
     if not prev:
         print("perf-trend: no readable baseline CSVs (first run, or "
               "artifact fetch failed); nothing to compare")
@@ -111,7 +125,7 @@ def main(argv: List[str]) -> int:
         print(f"perf-trend: current CSV missing at {cur_path}")
         return 1
 
-    cur = parse_csv(cur_path)
+    cur = parse_csv(cur_path, args.metric)
     shared = prev.keys() & cur.keys()
     if not shared:
         print("perf-trend: no comparable cells between baseline and "
@@ -126,8 +140,8 @@ def main(argv: List[str]) -> int:
           f"{len(regressions)} regressed >{args.threshold:.0%}, "
           f"{improved} improved >{args.threshold:.0%}")
     for (matrix, impl, d), p, c, drop in regressions:
-        msg = (f"{matrix}/{impl}/d={d}: {p:.3f} -> {c:.3f} GFLOP/s "
-               f"({drop:.0%} drop)")
+        msg = (f"{matrix}/{impl}/d={d}: {p:.3f} -> {c:.3f} "
+               f"{args.metric} ({drop:.0%} drop)")
         # GitHub annotation so the warning surfaces on the PR checks page.
         print(f"::warning title=SpMM perf regression::{msg}")
         print(f"  REGRESSION {msg}")
