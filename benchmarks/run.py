@@ -76,7 +76,8 @@ def bench_spmm(beta: float, *, scale: int = 16, d_values=None,
                repeats=None, csv_name: str = "table5_spmm.csv",
                dispatch_claims_only: bool = False) -> None:
     from benchmarks.spmm_suite import (
-        dispatch_claims_check, paper_claims_check, run_suite, to_csv)
+        dispatch_claims_check, paper_claims_check, run_suite,
+        scale_free_claims_check, to_csv)
     # scale=16 (n=65,536): B and C at d=64 are 16 MB each, so the working
     # set exceeds this host's LLC — the paper's out-of-cache regime
     # (Section IV-A "matrices were selected to exceed on-chip caches").
@@ -97,6 +98,11 @@ def bench_spmm(beta: float, *, scale: int = 16, d_values=None,
               else paper_claims_check(results))
     failed = [k for k, v in claims.items() if not v]
     for k, v in claims.items():
+        _emit(f"fig2.claim.{k}", 0.0, "PASS" if v else "FAIL")
+    # Soft-report (like the shard speedup target): the measured
+    # binned-vs-CSR ordering needs a bandwidth-bound host; CI boxes are
+    # instruction-bound, so this prints but never fails the build.
+    for k, v in scale_free_claims_check(results).items():
         _emit(f"fig2.claim.{k}", 0.0, "PASS" if v else "FAIL")
     if dispatch_claims_only and failed:
         raise SystemExit(f"dispatch claims failed: {failed}")

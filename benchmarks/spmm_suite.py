@@ -248,12 +248,48 @@ def dispatch_claims_check(results: List[CellResult]) -> Dict[str, bool]:
     big = {m for m, nnz in nnzs.items() if nnz >= 4 * min(nnzs.values())}
     ratios = {m: r for m, r in auto_vs_best_fixed(results).items()
               if m in big}
+    def picks_any(prefixes, fmts):
+        sel = [c for mname, c in chosen_at.items()
+               if any(mname.startswith(p) for p in prefixes)]
+        return bool(sel) and all(c in fmts for c in sel)
+
     return {
         "dispatch_banded_to_dia": picks(("ideal_diagonal", "band"), "dia"),
         "dispatch_fem_to_bcsr": picks(("fem",), "bcsr"),
-        "dispatch_scale_free_to_csr": picks(("powerlaw",), "csr"),
+        # Scale-free must land in the CSR gather family — plain CSR or one
+        # of PR 8's reorderings of it (binned/rowsplit/ell_coo); which
+        # member wins is a per-host ceiling question, not a policy one.
+        "dispatch_scale_free_to_gather_family": picks_any(
+            ("powerlaw",), ("csr", "binned", "rowsplit", "ell_coo")),
         "dispatch_auto_within_0.9_of_best": (
             bool(ratios) and min(ratios.values()) >= 0.9),
+    }
+
+
+def scale_free_claims_check(results: List[CellResult]) -> Dict[str, bool]:
+    """PR 8's measured scale-free claim (soft-reported by the runner).
+
+    The two-phase binned kernel should beat the plain CSR gather order on
+    the *highest-skew* power-law matrices (``powerlaw_*_205``): hub
+    columns make CSR's row-major gather thrash B, while slab binning
+    fetches each B slab once.  On 1-core CI hosts the gather pipeline is
+    instruction-bound rather than bandwidth-bound and the ordering
+    difference can vanish into wall-clock noise, so ``benchmarks/run.py``
+    prints this claim PASS/FAIL without failing the build — gated like
+    the sharded tier's speedup target, with the model-level form asserted
+    deterministically in ``tests/test_dispatch.py``.
+    """
+    high_skew = [r for r in results
+                 if r.pattern == "scale_free" and "_205" in r.matrix]
+
+    def mean_gf(impl):
+        xs = [r.gflops for r in high_skew if r.impl == impl and r.d >= 16]
+        return float(np.mean(xs)) if xs else float("nan")
+
+    binned, csr = mean_gf("binned"), mean_gf("csr")
+    return {
+        "binned_beats_csr_on_high_skew_scale_free": bool(
+            np.isfinite(binned) and np.isfinite(csr) and binned >= csr),
     }
 
 

@@ -12,7 +12,8 @@ from typing import Tuple
 class SpMMExperimentConfig:
     scale: int = 16                  # log2(n) for the generated suite
     d_values: Tuple[int, ...] = (1, 4, 16, 64)
-    implementations: Tuple[str, ...] = ("csr", "ell", "bcsr", "dia")
+    implementations: Tuple[str, ...] = ("csr", "ell", "bcsr", "dia",
+                                        "binned", "rowsplit", "ell_coo")
     bcsr_block: int = 64             # t for the CSB-analogue
     dtype: str = "float32"           # paper uses float64; fp32 on this host
     repeats: int = 5                 # timing repeats (min is reported)

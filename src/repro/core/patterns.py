@@ -197,6 +197,10 @@ def paper_suite(scale: int = 16):
         # Scale-free (paper: com-Orkut, com-LiveJournal, uk-2002)
         f"powerlaw_{scale}_22": lambda: scale_free(n, 16, alpha=2.2, seed=8),
         f"powerlaw_{scale}_28": lambda: scale_free(n, 16, alpha=2.8, seed=9),
+        # High skew (alpha -> 2): the heaviest hubs the generator makes —
+        # the regime PR 8's binned/rowsplit kernels target.
+        f"powerlaw_{scale}_205": lambda: scale_free(
+            n, 16, alpha=2.05, seed=10),
     }
 
 

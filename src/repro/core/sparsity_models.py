@@ -14,6 +14,12 @@ for B, which is where sparsity structure enters:
   scale-free  (Eq. 6): hub rows of B stay resident; hub edge mass from the
                        appendix power-law derivation, nnz_hub = nnz * f^((a-2)/(a-1)).
 
+Kernel-side variants (outside the paper's numbering) price the scale-free
+kernels of PR 8: ``ai_binned`` charges binning traffic (slab reads +
+partial-C writes), ``ai_rowsplit`` the windowed-partial scatter of the
+merge-path kernel, and ``ai_ell_coo`` the padded-body / COO-tail storage
+split of the hybrid layout.
+
 Byte sizes are parameterized: the paper uses fp64 values (8 B) + int32 indices
 (4 B); the TPU variants default to bf16/fp32.  The paper's constants are the
 defaults so the reproduction benchmarks match the published equations exactly.
@@ -179,6 +185,81 @@ def ai_scale_free(n: int, nnz: int, d: int, *, alpha: float = 2.2,
         bytes_b=(nnz - nnz_hub) * d * sizeof_val + n_hub * d * sizeof_val,
         bytes_c=_traffic_c(n, d, sizeof_val),
         model="scale_free",
+    )
+
+
+def ai_binned(n: int, nnz: int, d: int, *, slab_rows: int,
+              slabs_touched: int, num_visits: int, row_tile: int = 8,
+              sizeof_val: int = 8, sizeof_idx: int = 4) -> TrafficBreakdown:
+    """Binning-traffic model for the two-phase binned kernel (PR 8).
+
+    Propagation blocking trades B gathers for partial-C writes: slab-major
+    traversal reads each *touched* B slab exactly once per pass
+    (``slabs_touched * slab_rows * d`` instead of Eq. 2's ``nnz * d``),
+    and pays for it with one ``[row_tile, d]`` partial written and read
+    back per (slab, row-tile) visit before the final C write.  On skewed
+    matrices hub columns collapse many nonzeros into few visits, so the
+    partial traffic stays small while the B saving is ~``avg_degree``x;
+    on uniform matrices ``num_visits`` approaches ``tiles * slabs`` and
+    the model correctly prices the kernel out.
+
+    A traffic is the bin layout (values + column + row ids per nonzero,
+    plus the slab pointer array).
+    """
+    partials = 2.0 * num_visits * row_tile * d * sizeof_val
+    return TrafficBreakdown(
+        flops=flops_spmm(nnz, d),
+        bytes_a=nnz * (sizeof_val + 2 * sizeof_idx)
+        + (slabs_touched + 1) * sizeof_idx,
+        bytes_b=min(slabs_touched * slab_rows, n) * d * sizeof_val,
+        bytes_c=_traffic_c(n, d, sizeof_val) + partials,
+        model="binned",
+    )
+
+
+def ai_rowsplit(n: int, nnz: int, d: int, *, window: int, chunk: int = 128,
+                bytes_b: float | None = None, sizeof_val: int = 8,
+                sizeof_idx: int = 4) -> TrafficBreakdown:
+    """Merge-path row-split model: equal-nnz chunks, windowed partials.
+
+    B traffic follows the structure regime (the gathers are the same as
+    CSR's; pass the regime's ``bytes_b``, defaulting to Eq. 2's
+    no-reuse term).  The load-balance price is the per-chunk
+    ``[window, d]`` partial written and read back by the scatter
+    epilogue — small when chunks span few rows (skewed matrices), up to
+    one extra C-sized pass per ``chunk/window`` on degree-1 rows.
+    """
+    num_chunks = max(1, -(-nnz // chunk))
+    partials = 2.0 * num_chunks * window * d * sizeof_val
+    return TrafficBreakdown(
+        flops=flops_spmm(nnz, d),
+        bytes_a=nnz * (sizeof_val + 2 * sizeof_idx),
+        bytes_b=nnz * d * sizeof_val if bytes_b is None else bytes_b,
+        bytes_c=_traffic_c(n, d, sizeof_val) + partials,
+        model="rowsplit",
+    )
+
+
+def ai_ell_coo(n: int, nnz: int, d: int, *, k_cut: int, tail_nnz: int,
+               bytes_b: float | None = None, sizeof_val: int = 8,
+               sizeof_idx: int = 4) -> TrafficBreakdown:
+    """Tail-fraction model for the hybrid sorted-ELL + COO layout.
+
+    A traffic splits into the padded body (value + column per slot,
+    ``n * k_cut`` slots) and the COO tail (value + row + column per
+    overflow entry).  B gathers follow the issued slots — body padding
+    gathers rows it multiplies by zero — so the default B term charges
+    ``(n * k_cut + tail_nnz)`` gathers; regime-aware callers scale their
+    structure model by the same issued/nnz ratio and pass ``bytes_b``.
+    """
+    issued = n * k_cut + tail_nnz
+    return TrafficBreakdown(
+        flops=flops_spmm(nnz, d),
+        bytes_a=n * k_cut * (sizeof_val + sizeof_idx)
+        + tail_nnz * (sizeof_val + 2 * sizeof_idx),
+        bytes_b=issued * d * sizeof_val if bytes_b is None else bytes_b,
+        bytes_c=_traffic_c(n, d, sizeof_val),
+        model="ell_coo",
     )
 
 

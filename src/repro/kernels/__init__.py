@@ -8,8 +8,9 @@ for direct kernel use.
 from repro.kernels import registry
 from repro.kernels.ops import (
     band_to_blocks, banded_spmm, bcsr_kernel_roofline, bcsr_spmm,
-    csr_kernel_roofline, csr_spmm, dia_kernel_roofline, grouped_matmul,
-    grouped_matmul_roofline, pad_empty_block_rows,
+    binned_spmm, csr_kernel_roofline, csr_spmm, dia_kernel_roofline,
+    grouped_matmul, grouped_matmul_roofline, pad_empty_block_rows,
+    rowsplit_spmm,
 )
 from repro.kernels.registry import (
     KernelContext, KernelRoofline, KernelSpec, choose_b_tile,
@@ -19,8 +20,9 @@ from repro.kernels.registry import (
 __all__ = [
     "registry",
     "band_to_blocks", "banded_spmm", "bcsr_kernel_roofline", "bcsr_spmm",
-    "csr_kernel_roofline", "csr_spmm", "dia_kernel_roofline",
-    "grouped_matmul", "grouped_matmul_roofline", "pad_empty_block_rows",
+    "binned_spmm", "csr_kernel_roofline", "csr_spmm",
+    "dia_kernel_roofline", "grouped_matmul", "grouped_matmul_roofline",
+    "pad_empty_block_rows", "rowsplit_spmm",
     "KernelContext", "KernelRoofline", "KernelSpec", "choose_b_tile",
     "feature_matrix", "formats_for",
 ]

@@ -24,6 +24,9 @@ from repro.kernels.registry import (          # noqa: F401
 )
 from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
 from repro.kernels.banded_spmm import banded_spmm_pallas
+from repro.kernels.binned_spmm import (
+    binned_spmm_pallas, csr_to_slab_bins, pack_rowsplit_chunks,
+    rowsplit_spmm_pallas)
 from repro.kernels.csr_spmm import csr_spmm_pallas, csr_to_row_tiles
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
 from repro.sparse.formats import BCSRMatrix, CSRMatrix
@@ -107,6 +110,68 @@ def banded_spmm(band: jnp.ndarray, b: jnp.ndarray, *, t: int, w: int,
     """
     return banded_spmm_pallas(band, b, t=t, w=w, block_d=block_d,
                               interpret=_interpret(interpret))
+
+
+def binned_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
+                chunk: int = 128, block_d: int = 512,
+                b_tile: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Two-phase binned SpMM via the Pallas slab-major kernel.
+
+    Bins the CSR nonzeros by B-row slab host-side, so the kernel touches
+    each VMEM-resident slab of B exactly once per d-pass and streams
+    partial C blocks instead of streaming gathers (the scale-free
+    regime's propagation-blocking traversal).
+
+    Args:
+        a: CSR container, [n, n] (the binning starts from CSR order).
+        b: dense right-hand side, [n, d]; when d > ``block_d``, d must be
+            a multiple of ``block_d`` (the tile clamps to min(block_d, d)).
+        row_tile: rows per partial C block.
+        chunk: nonzeros packed per kernel step.
+        b_tile: B rows per VMEM-resident slab; None holds B whole (one
+            slab — degenerates to CSR order).
+        interpret: force Pallas interpret mode; default: off-TPU only.
+
+    Returns:
+        ``C = A @ B`` as a dense [n, d] array.
+    """
+    arrays = csr_to_slab_bins(
+        np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
+        n=a.n, row_tile=row_tile, chunk=chunk, b_tile=b_tile)
+    return binned_spmm_pallas(*(jnp.asarray(x) for x in arrays), b,
+                              n=a.n, row_tile=row_tile, b_tile=b_tile,
+                              block_d=block_d,
+                              interpret=_interpret(interpret))
+
+
+def rowsplit_spmm(a: CSRMatrix, b: jnp.ndarray, *, chunk: int = 128,
+                  block_d: int = 512,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Row-split (merge-path) SpMM via the Pallas equal-nnz-chunk kernel.
+
+    Cuts the nonzero stream into exact-``chunk`` work units so skewed
+    degree distributions (hub rows) cannot starve kernel programs, then
+    scatters the windowed partials back by row in a segment-sum epilogue.
+
+    Args:
+        a: CSR container, [n, n].
+        b: dense right-hand side, [n, d]; held whole in VMEM (this kernel
+            trades B residency for perfect load balance).
+        chunk: nonzeros per work unit.
+        block_d: d-tile width the kernel iterates over.
+        interpret: force Pallas interpret mode; default: off-TPU only.
+
+    Returns:
+        ``C = A @ B`` as a dense [n, d] array.
+    """
+    row_map, cols, slots, vals = pack_rowsplit_chunks(
+        np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
+        n=a.n, chunk=chunk)
+    return rowsplit_spmm_pallas(
+        jnp.asarray(row_map), jnp.asarray(cols), jnp.asarray(slots),
+        jnp.asarray(vals), b, n=a.n, window=int(row_map.shape[1]),
+        block_d=block_d, interpret=_interpret(interpret))
 
 
 def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray, group_ids: jnp.ndarray,

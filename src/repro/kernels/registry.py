@@ -41,6 +41,9 @@ from repro.core import sparsity_models as sm
 from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec
 from repro.kernels.banded_spmm import banded_spmm_pallas
 from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
+from repro.kernels.binned_spmm import (
+    binned_spmm_pallas, csr_to_slab_bins, pack_rowsplit_chunks,
+    rowsplit_spmm_pallas)
 from repro.kernels.csr_spmm import csr_spmm_pallas, csr_to_row_tiles
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
 
@@ -52,8 +55,9 @@ BACKENDS: Tuple[str, ...] = ("jax", "pallas")
 #: ``repro.core.calibrate`` stamps saved calibrations with it so
 #: ``plan.summary()`` can nudge when a calibration predates the kernels
 #: it would be applied to.  History: 1 = initial KernelSpec registry,
-#: 2 = per-d B-slab re-packing (``KernelContext.plan_d``).
-REGISTRY_VERSION: int = 2
+#: 2 = per-d B-slab re-packing (``KernelContext.plan_d``),
+#: 3 = scale-free kernel tier (binned / rowsplit / ell_coo).
+REGISTRY_VERSION: int = 3
 
 
 def _on_tpu() -> bool:
@@ -152,7 +156,8 @@ class KernelContext:
 class KernelSpec:
     """One registered kernel: layout prep, launch, estimate, VMEM model."""
 
-    format: str                  # "csr" | "ell" | "bcsr" | "dia" | "grouped"
+    format: str                  # "csr" | "ell" | "bcsr" | "dia" | "binned"
+    #                            # | "rowsplit" | "ell_coo" | "grouped"
     backend: str                 # "jax" | "pallas"
     description: str
     prepare: Callable[[Any, KernelContext], Any]
@@ -181,6 +186,15 @@ class KernelSpec:
     #: kernel reads B throughout the launch — so the engine keeps its
     #: staging buffer alive until materialization unless this flips.
     donate_b: bool = False
+    #: What ``prepare``/``bind`` accept as the matrix operand.  ``"coo"``
+    #: specs take a ``repro.core.patterns.COOMatrix`` and compute
+    #: ``C = A @ B`` — the contract the cross-kernel differential suite
+    #: (``tests/test_differential.py``) verifies against the dense
+    #: reference for every registered pair.  Specs with another operand
+    #: (the MoE grouped matmul's ``(w, group_ids, bm, bk, bn)`` tuple)
+    #: declare it here so generic sweeps can skip them explicitly
+    #: instead of special-casing format names.
+    operand: str = "coo"
 
     @property
     def key(self) -> Tuple[str, str]:
@@ -400,7 +414,60 @@ def _convert(ctx: KernelContext, m, format: str):
         return fmt.coo_to_bcsr(m, ctx.bcsr_block)
     if format == "dia":
         return fmt.coo_to_dia(m, max_offsets=ctx.max_dia_offsets)
+    if format == "binned":
+        return fmt.coo_to_binned(m)
+    if format == "rowsplit":
+        return fmt.coo_to_rowsplit(m, chunk=ctx.chunk)
+    if format == "ell_coo":
+        return fmt.coo_to_ell_coo(m)
     raise ValueError(f"unknown format {format!r}")
+
+
+# ------------------------------------------------------------------ #
+# Layout statistics shared by the estimates and the dispatch models
+# ------------------------------------------------------------------ #
+
+def binned_layout_stats(m, *, slab_rows: int,
+                        row_tile: int = 8) -> Tuple[int, int]:
+    """(slabs_touched, num_visits) of the slab-binned layout for ``m``.
+
+    A visit is one (B slab, row tile) pair with nonzeros — the unit the
+    binned kernel writes one partial C block for.  Both counts feed
+    ``sm.ai_binned``: B is read once per touched slab, partials cost
+    ``2 * num_visits * row_tile * d`` extra C traffic.
+    """
+    if m.nnz == 0:
+        return 1, 1
+    slabs = np.asarray(m.cols, dtype=np.int64) // slab_rows
+    tiles = np.asarray(m.rows, dtype=np.int64) // row_tile
+    num_slabs = max(1, -(-m.n // slab_rows))
+    visits = np.unique(tiles * num_slabs + slabs).shape[0]
+    return int(np.unique(slabs).shape[0]), int(visits)
+
+
+def rowsplit_window_model(n_nonempty: int, nnz: int,
+                          chunk: int = 128) -> int:
+    """Expected row-window width of the row-split packing (model side).
+
+    A chunk of ``chunk`` nonzeros spans ~``chunk / avg_degree`` rows;
+    rounded up to the kernel's multiple-of-8 output tile.  The packed
+    layout computes the exact maximum; the model uses this expectation
+    so planning never needs the layout.
+    """
+    if nnz <= 0 or n_nonempty <= 0:
+        return 8
+    span = min(chunk, -(-n_nonempty * chunk // nnz) + 1)
+    return max(8, -(-span // 8) * 8)
+
+
+def ell_coo_split_stats(m) -> Tuple[int, int]:
+    """(k_cut, tail_nnz) of the hybrid ELL/COO layout for ``m``."""
+    from repro.sparse import formats as fmt
+    if m.nnz == 0:
+        return 1, 0
+    deg = np.bincount(np.asarray(m.rows), minlength=m.n)
+    k_cut = fmt.ell_coo_cutoff(deg)
+    return k_cut, int(np.maximum(deg - k_cut, 0).sum())
 
 
 def _jax_prepare(format: str):
@@ -447,6 +514,68 @@ for _f, _desc in (("csr", "gather + segment-sum (XLA)"),
         format=_f, backend="jax", description=_desc,
         prepare=_jax_prepare(_f), run=_jax_run(_f),
         estimate=_jax_estimate(_f), vmem_footprint=_zero_footprint))
+
+
+def _binned_estimate(name: str, resolve_slab):
+    def estimate(m, d, ctx: KernelContext) -> KernelRoofline:
+        slab = resolve_slab(m, ctx)
+        touched, visits = binned_layout_stats(m, slab_rows=slab,
+                                              row_tile=ctx.row_tile)
+        tb = sm.ai_binned(m.n, m.nnz, d, slab_rows=slab,
+                          slabs_touched=touched, num_visits=visits,
+                          row_tile=ctx.row_tile)
+        return KernelRoofline(
+            name=name, ai=tb.ai, useful_flops=tb.flops, mxu_flops=tb.flops,
+            attainable_flops_per_s=ctx.hardware.attainable(tb.ai),
+            mxu_utilization=1.0)
+    return estimate
+
+
+def _jax_slab(m, ctx: KernelContext) -> int:
+    from repro.sparse import formats as fmt
+    return fmt.default_slab_rows(m.n)
+
+
+def _pallas_slab(m, ctx: KernelContext) -> int:
+    return ctx.resolve_b_tile(m.n) or m.n
+
+
+def _rowsplit_estimate(name: str):
+    def estimate(m, d, ctx: KernelContext) -> KernelRoofline:
+        n_nonempty = int(np.unique(np.asarray(m.rows)).shape[0])
+        window = rowsplit_window_model(n_nonempty, m.nnz, ctx.chunk)
+        tb = sm.ai_rowsplit(m.n, m.nnz, d, window=window, chunk=ctx.chunk)
+        return KernelRoofline(
+            name=name, ai=tb.ai, useful_flops=tb.flops, mxu_flops=tb.flops,
+            attainable_flops_per_s=ctx.hardware.attainable(tb.ai),
+            mxu_utilization=1.0)
+    return estimate
+
+
+def _ell_coo_estimate(name: str):
+    def estimate(m, d, ctx: KernelContext) -> KernelRoofline:
+        k_cut, tail = ell_coo_split_stats(m)
+        tb = sm.ai_ell_coo(m.n, m.nnz, d, k_cut=k_cut, tail_nnz=tail)
+        issued = max(m.n * k_cut + tail, 1)
+        return KernelRoofline(
+            name=name, ai=tb.ai, useful_flops=tb.flops,
+            mxu_flops=2.0 * d * issued,
+            attainable_flops_per_s=ctx.hardware.attainable(tb.ai),
+            mxu_utilization=min(1.0, m.nnz / issued))
+    return estimate
+
+
+for _f, _desc, _est in (
+        ("binned", "slab-binned gather + segment-sum (XLA)",
+         _binned_estimate("binned_spmm_jax", _jax_slab)),
+        ("rowsplit", "equal-nnz chunk gather + segment-sum (XLA)",
+         _rowsplit_estimate("rowsplit_spmm_jax")),
+        ("ell_coo", "padded-body slot scan + COO-tail segment-sum (XLA)",
+         _ell_coo_estimate("ell_coo_spmm_jax"))):
+    register(KernelSpec(
+        format=_f, backend="jax", description=_desc,
+        prepare=_jax_prepare(_f), run=_jax_run(_f),
+        estimate=_est, vmem_footprint=_zero_footprint))
 
 
 def _csr_pallas_prepare(m, ctx: KernelContext):
@@ -496,6 +625,90 @@ for _f in ("csr", "ell"):
         prepare=_csr_pallas_prepare, run=_csr_pallas_run,
         estimate=_csr_pallas_estimate, vmem_footprint=_csr_pallas_footprint,
         layout_key="csr"))
+
+
+def _binned_pallas_prepare(m, ctx: KernelContext):
+    csr = _convert(ctx, m, "csr")
+    bt = ctx.resolve_b_tile(m.n)
+    arrays = csr_to_slab_bins(
+        np.asarray(csr.indptr), np.asarray(csr.indices),
+        np.asarray(csr.data), n=csr.n, row_tile=ctx.row_tile,
+        chunk=ctx.chunk, b_tile=bt)
+    return {"n": csr.n, "b_tile": bt, "row_tile": ctx.row_tile,
+            "arrays": tuple(jnp.asarray(x) for x in arrays)}
+
+
+def _binned_pallas_run(layout, b, ctx: KernelContext):
+    vt, cv, cs, cols, slots, vals = layout["arrays"]
+    return binned_spmm_pallas(
+        vt, cv, cs, cols, slots, vals, b, n=layout["n"],
+        row_tile=layout["row_tile"], b_tile=layout["b_tile"],
+        block_d=pallas_block_d(b.shape[1]),
+        interpret=ctx.resolve_interpret())
+
+
+register(KernelSpec(
+    format="binned", backend="pallas",
+    description="two-phase binned kernel: slab-major accumulation over "
+                "VMEM-resident B slabs, segment-sum epilogue",
+    prepare=_binned_pallas_prepare, run=_binned_pallas_run,
+    estimate=_binned_estimate("binned_spmm", _pallas_slab),
+    # Residency matches the streamed CSR kernel: one B slab, one partial
+    # C block, and the gather/index chunks (the visit partials live in
+    # HBM and stream through the same C-tile slot).
+    vmem_footprint=_csr_pallas_footprint,
+    layout_key="binned"))
+
+
+def _rowsplit_pallas_prepare(m, ctx: KernelContext):
+    csr = _convert(ctx, m, "csr")
+    row_map, cols, slots, vals = pack_rowsplit_chunks(
+        np.asarray(csr.indptr), np.asarray(csr.indices),
+        np.asarray(csr.data), n=csr.n, chunk=ctx.chunk)
+    return {"n": csr.n, "window": int(row_map.shape[1]),
+            "arrays": tuple(jnp.asarray(x)
+                            for x in (row_map, cols, slots, vals))}
+
+
+def _rowsplit_pallas_run(layout, b, ctx: KernelContext):
+    row_map, cols, slots, vals = layout["arrays"]
+    return rowsplit_spmm_pallas(
+        row_map, cols, slots, vals, b, n=layout["n"],
+        window=layout["window"], block_d=pallas_block_d(b.shape[1]),
+        interpret=ctx.resolve_interpret())
+
+
+def _rowsplit_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
+    bd = min(512, pallas_block_d(d))
+    n_pad = -(-n // 8) * 8
+    # Whole B resident (the load-balance kernel does not stream B) plus
+    # the widest possible window partial and the gather/index chunks.
+    return 4 * (n_pad * bd + ctx.chunk * bd + ctx.chunk * bd
+                + 3 * ctx.chunk)
+
+
+register(KernelSpec(
+    format="rowsplit", backend="pallas",
+    description="equal-nnz row-split kernel (merge-path load balance), "
+                "windowed partials + scatter epilogue",
+    prepare=_rowsplit_pallas_prepare, run=_rowsplit_pallas_run,
+    estimate=_rowsplit_estimate("rowsplit_spmm"),
+    vmem_footprint=_rowsplit_pallas_footprint,
+    layout_key="rowsplit"))
+
+
+# The hybrid ELL/COO pick lowers to the row-tiled CSR kernel on TPU
+# (like ELL): the CSR kernel's sliced-ELL chunk packing already realizes
+# the body/tail split physically — short rows pack densely, hub-row
+# overflow lands in extra chunks — so the pallas pair shares the cached
+# CSR row-tile layout and differs only in its estimate.
+register(KernelSpec(
+    format="ell_coo", backend="pallas",
+    description="hybrid ELL/COO pick lowered to the row-tiled CSR kernel",
+    prepare=_csr_pallas_prepare, run=_csr_pallas_run,
+    estimate=_ell_coo_estimate("ell_coo_spmm"),
+    vmem_footprint=_csr_pallas_footprint,
+    layout_key="csr"))
 
 
 def _bcsr_pallas_prepare(m, ctx: KernelContext):
@@ -591,4 +804,5 @@ register(KernelSpec(
     format="grouped", backend="pallas",
     description="MoE expert FFN as block-diagonal grouped matmul",
     prepare=_grouped_prepare, run=_grouped_run,
-    estimate=_grouped_estimate, vmem_footprint=_grouped_footprint))
+    estimate=_grouped_estimate, vmem_footprint=_grouped_footprint,
+    operand="moe"))

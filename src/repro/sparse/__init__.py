@@ -11,13 +11,15 @@ right-hand sides (``docs/serving.md``).  The per-format implementations
 remain exported for direct use.
 """
 from repro.sparse.formats import (
-    BCSRMatrix, CSRMatrix, DIAMatrix, ELLMatrix,
-    coo_to_bcsr, coo_to_csr, coo_to_dense, coo_to_dia, coo_to_ell,
+    BCSRMatrix, BinnedMatrix, CSRMatrix, DIAMatrix, ELLCOOMatrix, ELLMatrix,
+    RowSplitMatrix,
+    coo_to_bcsr, coo_to_binned, coo_to_csr, coo_to_dense, coo_to_dia,
+    coo_to_ell, coo_to_ell_coo, coo_to_rowsplit, ell_coo_cutoff,
     nnz_balanced_splits,
 )
 from repro.sparse.spmm import (
-    IMPLEMENTATIONS, bcsr_spmm, bcsr_spmm_scan, csr_spmm, dense_spmm,
-    dia_spmm, ell_spmm,
+    IMPLEMENTATIONS, bcsr_spmm, bcsr_spmm_scan, binned_spmm, csr_spmm,
+    dense_spmm, dia_spmm, ell_coo_spmm, ell_spmm, rowsplit_spmm,
 )
 from repro.sparse.dispatch import (
     DispatchPlan, Dispatcher, FORMATS, STRATEGIES, default_dispatcher,
@@ -32,11 +34,14 @@ from repro.sparse.engine import (
 )
 
 __all__ = [
-    "BCSRMatrix", "CSRMatrix", "DIAMatrix", "ELLMatrix",
-    "coo_to_bcsr", "coo_to_csr", "coo_to_dense", "coo_to_dia", "coo_to_ell",
-    "nnz_balanced_splits",
-    "IMPLEMENTATIONS", "bcsr_spmm", "bcsr_spmm_scan", "csr_spmm",
-    "dense_spmm", "dia_spmm", "ell_spmm",
+    "BCSRMatrix", "BinnedMatrix", "CSRMatrix", "DIAMatrix", "ELLCOOMatrix",
+    "ELLMatrix", "RowSplitMatrix",
+    "coo_to_bcsr", "coo_to_binned", "coo_to_csr", "coo_to_dense",
+    "coo_to_dia", "coo_to_ell", "coo_to_ell_coo", "coo_to_rowsplit",
+    "ell_coo_cutoff", "nnz_balanced_splits",
+    "IMPLEMENTATIONS", "bcsr_spmm", "bcsr_spmm_scan", "binned_spmm",
+    "csr_spmm", "dense_spmm", "dia_spmm", "ell_coo_spmm", "ell_spmm",
+    "rowsplit_spmm",
     "DispatchPlan", "Dispatcher", "FORMATS", "STRATEGIES",
     "default_dispatcher", "plan_spmm", "spmm",
     "BSpec", "StreamPlan", "as_b_spec", "plan",

@@ -52,7 +52,8 @@ from repro.core import sparsity_models as sm
 from repro.core.patterns import COOMatrix
 from repro.sparse import formats as fmt
 
-FORMATS: Tuple[str, ...] = ("csr", "ell", "bcsr", "dia")
+FORMATS: Tuple[str, ...] = ("csr", "ell", "bcsr", "dia",
+                            "binned", "rowsplit", "ell_coo")
 STRATEGIES: Tuple[str, ...] = ("auto",) + FORMATS
 
 #: Per-format compute ceiling: ``(peak_fraction, d_half)``.  Each
@@ -72,6 +73,19 @@ DEFAULT_EFFICIENCY: Dict[str, Tuple[float, float]] = {
     "ell": (0.040, 8.0),
     "bcsr": (0.600, 28.0),
     "dia": (0.057, 3.0),
+    # Scale-free-regime kernels (PR 8).  On compute-bound hosts these sit
+    # strictly below CSR (same gather/segment-sum algebra plus binning /
+    # window bookkeeping), so they only win where their *bandwidth* model
+    # does — i.e. on bandwidth-bound parts where slab binning collapses
+    # the B-traffic term.  Calibration replaces these like any other.
+    "binned": (0.022, 112.0),
+    "rowsplit": (0.027, 104.0),
+    # ell_coo's jax path is an ELL body scan *plus* a COO-tail
+    # segment-sum; the tail pass inherits CSR's gather d-scaling, so the
+    # blended d_half sits between ELL's 8 and CSR's 112.  (With ELL's
+    # d_half=8 it over-predicted small-d launches on *blocked* matrices
+    # and beat BCSR on FEM suites it measures 2x slower on.)
+    "ell_coo": (0.036, 40.0),
 }
 
 
@@ -124,7 +138,8 @@ class DispatchPlan:
         """Return the :class:`CandidateEval` for format ``name``.
 
         Args:
-            name: one of ``FORMATS`` (``"csr" | "ell" | "bcsr" | "dia"``).
+            name: one of ``FORMATS`` (``"csr" | "ell" | "bcsr" | "dia" |
+                "binned" | "rowsplit" | "ell_coo"``).
 
         Returns:
             The audit record for that format.
@@ -253,6 +268,12 @@ class Dispatcher:
                 out = fmt.coo_to_bcsr(m, self.bcsr_block)
             elif format == "dia":
                 out = fmt.coo_to_dia(m, max_offsets=self.max_dia_offsets)
+            elif format == "binned":
+                out = fmt.coo_to_binned(m)
+            elif format == "rowsplit":
+                out = fmt.coo_to_rowsplit(m, chunk=128)
+            elif format == "ell_coo":
+                out = fmt.coo_to_ell_coo(m)
             else:
                 raise ValueError(f"unknown format {format!r}")
             self._converted[key] = out
@@ -372,6 +393,19 @@ class Dispatcher:
                     f"{self.max_dia_offsets}; DIA only suits banded "
                     f"matrices"), params
             return True, None, params
+        if format in ("binned", "rowsplit"):
+            # Both degrade gracefully on any structure (binned collapses
+            # to CSR order when one slab covers the matrix; rowsplit's
+            # padding is bounded by one chunk), so they are always
+            # eligible — the roofline model, not a gate, decides.
+            return True, None, {}
+        if format == "ell_coo":
+            deg = np.bincount(m.rows, minlength=m.n)
+            k_cut = fmt.ell_coo_cutoff(deg)
+            tail = int(np.clip(deg - k_cut, 0, None).sum())
+            # The cutoff *is* the padding-explosion defense that forces
+            # plain ELL to skip: hub rows overflow into the COO tail.
+            return True, None, {"k_cut": k_cut, "tail_nnz": tail}
         raise ValueError(f"unknown format {format!r}")
 
     def _model(self, m: COOMatrix, report: StructureReport, format: str,
@@ -416,6 +450,50 @@ class Dispatcher:
             # the detected regime — that is the point of choosing it.
             bytes_b = n * d * sv
             conv = k * n * sv
+        elif format == "binned":
+            # Slab-binned traversal: B traffic is slabs fetched, not
+            # nonzeros gathered — the scale-free regime's escape hatch
+            # from the Eq. 2 worst case.  (Lazy import: repro.kernels
+            # imports this package for its format containers.)
+            from repro.kernels import registry as kreg
+            slab = kreg.choose_b_tile(
+                n, hw.vmem_bytes, bd=min(512, kreg.pallas_block_d(d))) or n
+            touched, visits = kreg.binned_layout_stats(m, slab_rows=slab)
+            tb = sm.ai_binned(n, nnz, d, slab_rows=slab,
+                              slabs_touched=touched, num_visits=visits,
+                              sizeof_val=sv, sizeof_idx=si)
+            bytes_a, bytes_b, bytes_c = tb.bytes_a, tb.bytes_b, tb.bytes_c
+            useful = 1.0
+            # Conversion re-sorts the whole nonzero stream (an extra
+            # binning pass over the layout on top of writing it).
+            conv = 2.0 * (nnz * (sv + 2 * si) + (touched + 1) * si)
+            params.update(slab_rows=slab, slabs_touched=touched,
+                          num_visits=visits)
+        elif format == "rowsplit":
+            from repro.kernels import registry as kreg
+            n_nonempty = int(np.unique(m.rows).shape[0])
+            window = kreg.rowsplit_window_model(n_nonempty, nnz)
+            # B locality is whatever the structural regime grants — the
+            # row split changes load balance, not the gather pattern.
+            tb = sm.ai_rowsplit(n, nnz, d, window=window,
+                                bytes_b=regime_tb.bytes_b,
+                                sizeof_val=sv, sizeof_idx=si)
+            bytes_a, bytes_b, bytes_c = tb.bytes_a, tb.bytes_b, tb.bytes_c
+            useful = 1.0
+            conv = nnz * (sv + 2 * si)
+            params.update(window=window)
+        elif format == "ell_coo":
+            k_cut, tail = params["k_cut"], params["tail_nnz"]
+            issued = max(n * k_cut + tail, 1)
+            # Body padding issues extra gathers; scale the regime's
+            # per-gather B model by issued/nnz to charge for them.
+            tb = sm.ai_ell_coo(
+                n, nnz, d, k_cut=k_cut, tail_nnz=tail,
+                bytes_b=regime_tb.bytes_b * issued / max(nnz, 1),
+                sizeof_val=sv, sizeof_idx=si)
+            bytes_a, bytes_b, bytes_c = tb.bytes_a, tb.bytes_b, tb.bytes_c
+            useful = nnz / float(issued)
+            conv = n * k_cut * (sv + si) + tail * (sv + 2 * si)
         else:
             raise ValueError(f"unknown format {format!r}")
 

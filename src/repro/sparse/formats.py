@@ -10,6 +10,16 @@ These mirror the paper's evaluated layouts:
          stored densely so the MXU can consume it directly.
   DIA    banded/diagonal storage — realizes the paper's diagonal regime.
 
+Three scale-free-regime layouts ride on top (PR 8):
+
+  BINNED   slab-binned COO: nonzeros grouped by B-row slab with CSC-like
+           ordering inside each slab (propagation-blocking, arXiv
+           2002.11302) — the layout behind the two-phase binned kernel.
+  ROWSPLIT equal-nnz work chunks over the CSR nonzero stream (merge-path
+           style load balancing for skewed degree distributions).
+  ELL_COO  sorted-ELL body up to a per-matrix width cutoff plus a COO
+           tail for the overflow (hybrid storage, arXiv 2005.14469).
+
 All arrays are jnp; static shape information (n, t, nnz) lives in aux data so
 the containers jit cleanly.
 """
@@ -112,6 +122,102 @@ class DIAMatrix:
 
 
 _register(DIAMatrix, ("data",), ("offsets", "n"))
+
+
+@dataclasses.dataclass(frozen=True)
+class BinnedMatrix:
+    """Slab-binned COO: nonzeros grouped by B-row slab (bin = ``col //
+    slab_rows``), CSC-like (column-major) inside each slab.
+
+    The two-phase binned kernel's layout: phase one (conversion) pays one
+    streaming pass to produce this ordering; phase two accumulates each
+    slab's contributions while that B slab is VMEM/cache resident, so B
+    traffic is one read per touched slab instead of one gather per
+    nonzero.
+    """
+
+    data: jnp.ndarray      # [nnz] values, slab-major order
+    cols: jnp.ndarray      # [nnz] column ids (int32), ascending per slab
+    rows: jnp.ndarray      # [nnz] row id per nonzero (int32)
+    slab_ptr: jnp.ndarray  # [num_slabs+1] first nonzero of each slab (int32)
+    slab_rows: int         # static: B rows per slab
+    n: int                 # static
+
+    @property
+    def nnz(self) -> int:
+        """Number of stored nonzeros."""
+        return int(self.data.shape[0])
+
+    @property
+    def num_slabs(self) -> int:
+        """Number of B-row slabs (ceil(n / slab_rows))."""
+        return int(self.slab_ptr.shape[0]) - 1
+
+
+_register(BinnedMatrix, ("data", "cols", "rows", "slab_ptr"),
+          ("slab_rows", "n"))
+
+
+@dataclasses.dataclass(frozen=True)
+class RowSplitMatrix:
+    """Equal-nnz work chunks over the row-major nonzero stream.
+
+    The CSR stream is cut into chunks of exactly ``chunk`` nonzeros
+    (merge-path style), so a hub row spans many chunks instead of
+    serializing one worker — the load-balance answer to skewed degree
+    distributions.  The stream is zero-padded to whole chunks (padding
+    rows point at row 0 with value 0, contributing nothing).
+    """
+
+    data: jnp.ndarray   # [P] values, row-major, zero-padded
+    cols: jnp.ndarray   # [P] column ids (int32), 0-padded
+    rows: jnp.ndarray   # [P] row id per nonzero (int32), 0-padded
+    chunk: int          # static: nonzeros per equal-work chunk
+    n: int              # static
+    nnz: int            # static: true nonzeros (excludes padding)
+
+    @property
+    def num_chunks(self) -> int:
+        """Number of equal-work chunks (padded length / chunk)."""
+        return int(self.data.shape[0]) // self.chunk
+
+
+_register(RowSplitMatrix, ("data", "cols", "rows"), ("chunk", "n", "nnz"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ELLCOOMatrix:
+    """Hybrid layout: sorted-ELL body + COO tail above a width cutoff.
+
+    Each row's column-sorted nonzeros fill up to ``k_cut`` padded body
+    slots; the overflow (hub rows' long tails) lands in a row-major COO
+    tail.  The body is fully vectorizable like ELL but the cutoff is
+    chosen per matrix so power-law rows cannot blow up the padding.
+    """
+
+    body_data: jnp.ndarray     # [n, k_cut] values, zero-padded
+    body_indices: jnp.ndarray  # [n, k_cut] column ids, padded with 0
+    tail_data: jnp.ndarray     # [tail_nnz] overflow values
+    tail_cols: jnp.ndarray     # [tail_nnz] overflow column ids (int32)
+    tail_rows: jnp.ndarray     # [tail_nnz] overflow row ids (int32)
+    n: int                     # static
+    nnz: int                   # static: true nonzeros
+
+    @property
+    def k_cut(self) -> int:
+        """Padded body slots per row (the per-matrix width cutoff)."""
+        return int(self.body_data.shape[1])
+
+    @property
+    def tail_nnz(self) -> int:
+        """Nonzeros stored in the COO tail."""
+        return int(self.tail_data.shape[0])
+
+
+_register(ELLCOOMatrix,
+          ("body_data", "body_indices", "tail_data", "tail_cols",
+           "tail_rows"),
+          ("n", "nnz"))
 
 
 # --------------------------------------------------------------------------
@@ -240,6 +346,146 @@ def coo_to_dia(m, dtype=jnp.float32, max_offsets: int = 64) -> DIAMatrix:
         data[off_index[int(c) - int(r)], r] = v
     return DIAMatrix(data=jnp.asarray(data),
                      offsets=tuple(int(o) for o in offs), n=m.n)
+
+
+def default_slab_rows(n: int) -> int:
+    """Deterministic default B-slab height for :func:`coo_to_binned`.
+
+    The jax-backend container only encodes traversal order, so any slab
+    height is numerically equivalent; 512 rows (a 2 KiB-per-column slab)
+    is a stand-in for one cache-resident B slab.  The Pallas path sizes
+    its slabs from ``HardwareSpec.vmem_bytes`` instead
+    (``registry.choose_b_tile``).
+    """
+    return max(1, min(n, 512))
+
+
+def coo_to_binned(m, dtype=jnp.float32,
+                  slab_rows: int | None = None) -> BinnedMatrix:
+    """Convert a COO pattern to the slab-binned layout.
+
+    Args:
+        m: ``repro.core.patterns.COOMatrix`` (square, [n, n]).
+        dtype: value dtype of the container.
+        slab_rows: B rows per slab (bin = column // slab_rows); defaults
+            to :func:`default_slab_rows`.
+
+    Returns:
+        :class:`BinnedMatrix` sorted by (slab, column, row) — the
+        binning pass — with CSR-style ``slab_ptr``.
+    """
+    slab_rows = default_slab_rows(m.n) if slab_rows is None else slab_rows
+    if slab_rows < 1:
+        raise ValueError(f"slab_rows must be >= 1, got {slab_rows}")
+    slabs = m.cols.astype(np.int64) // slab_rows
+    order = np.lexsort((m.rows, m.cols, slabs))
+    num_slabs = max(1, -(-m.n // slab_rows))
+    counts = np.bincount(slabs[order], minlength=num_slabs)
+    slab_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return BinnedMatrix(
+        data=jnp.asarray(m.vals[order].astype(dtype)),
+        cols=jnp.asarray(m.cols[order].astype(np.int32)),
+        rows=jnp.asarray(m.rows[order].astype(np.int32)),
+        slab_ptr=jnp.asarray(slab_ptr),
+        slab_rows=slab_rows, n=m.n,
+    )
+
+
+def coo_to_rowsplit(m, dtype=jnp.float32, chunk: int = 128) -> RowSplitMatrix:
+    """Convert a COO pattern to equal-nnz work chunks.
+
+    Args:
+        m: ``repro.core.patterns.COOMatrix`` (square, [n, n]).
+        dtype: value dtype of the container.
+        chunk: nonzeros per work chunk (the merge-path grain).
+
+    Returns:
+        :class:`RowSplitMatrix` with the row-major stream zero-padded to
+        a whole number of chunks.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    order = np.lexsort((m.cols, m.rows))
+    padded = -(-max(m.nnz, 0) // chunk) * chunk
+    data = np.zeros(padded, dtype=dtype)
+    cols = np.zeros(padded, dtype=np.int32)
+    rows = np.zeros(padded, dtype=np.int32)
+    data[:m.nnz] = m.vals[order].astype(dtype)
+    cols[:m.nnz] = m.cols[order]
+    rows[:m.nnz] = m.rows[order]
+    return RowSplitMatrix(data=jnp.asarray(data), cols=jnp.asarray(cols),
+                          rows=jnp.asarray(rows), chunk=chunk, n=m.n,
+                          nnz=m.nnz)
+
+
+def ell_coo_cutoff(row_degrees) -> int:
+    """Storage-optimal ELL body width for the hybrid ELL/COO layout.
+
+    Minimizes ``n * k + 2 * tail_nnz(k)`` over cutoffs ``k``: each body
+    slot stores (value, column) for every row, while a tail entry stores
+    (value, row, column) — roughly 2x the per-entry cost but only for the
+    overflow.  On power-law degree distributions the optimum sits near
+    the median degree, so hub rows spill to the tail instead of padding
+    every row to the hub width.
+
+    Args:
+        row_degrees: per-row nonzero counts, length ``n``.
+
+    Returns:
+        The cutoff ``k >= 1``.
+    """
+    deg = np.asarray(row_degrees, dtype=np.int64).ravel()
+    n = deg.shape[0]
+    kmax = int(deg.max()) if n else 1
+    if kmax <= 1:
+        return 1
+    hist = np.bincount(deg, minlength=kmax + 1)
+    rows_gt = n - np.cumsum(hist[:kmax + 1])       # rows with degree > j
+    # tail(k) = sum_{j >= k} rows_gt[j]  (suffix sums of rows_gt)
+    suffix = np.concatenate([np.cumsum(rows_gt[::-1])[::-1], [0]])
+    k_values = np.arange(1, kmax + 1)
+    cost = n * k_values + 2 * suffix[1:kmax + 1]
+    return int(k_values[int(np.argmin(cost))])
+
+
+def coo_to_ell_coo(m, dtype=jnp.float32,
+                   k_cut: int | None = None) -> ELLCOOMatrix:
+    """Convert a COO pattern to the hybrid sorted-ELL + COO-tail layout.
+
+    Args:
+        m: ``repro.core.patterns.COOMatrix`` (square, [n, n]).
+        dtype: value dtype of the container.
+        k_cut: body width cutoff; defaults to the storage-optimal
+            :func:`ell_coo_cutoff` of the row-degree distribution.
+
+    Returns:
+        :class:`ELLCOOMatrix`: each row's column-sorted nonzeros fill up
+        to ``k_cut`` body slots; the overflow goes to a row-major tail.
+    """
+    deg = np.bincount(m.rows, minlength=m.n)
+    if k_cut is None:
+        k_cut = ell_coo_cutoff(deg) if m.nnz else 1
+    k_cut = max(1, int(k_cut))
+    order = np.lexsort((m.cols, m.rows))
+    rows = m.rows[order].astype(np.int64)
+    cols = m.cols[order]
+    vals = m.vals[order].astype(dtype)
+    indptr = np.concatenate([[0], np.cumsum(deg)])
+    slot = np.arange(rows.shape[0], dtype=np.int64) - indptr[rows]
+    in_body = slot < k_cut
+    body_data = np.zeros((m.n, k_cut), dtype=dtype)
+    body_indices = np.zeros((m.n, k_cut), dtype=np.int32)
+    body_data[rows[in_body], slot[in_body]] = vals[in_body]
+    body_indices[rows[in_body], slot[in_body]] = cols[in_body]
+    tail = ~in_body
+    return ELLCOOMatrix(
+        body_data=jnp.asarray(body_data),
+        body_indices=jnp.asarray(body_indices),
+        tail_data=jnp.asarray(vals[tail]),
+        tail_cols=jnp.asarray(cols[tail].astype(np.int32)),
+        tail_rows=jnp.asarray(rows[tail].astype(np.int32)),
+        n=m.n, nnz=m.nnz,
+    )
 
 
 # --------------------------------------------------------------------------

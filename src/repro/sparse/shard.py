@@ -286,6 +286,12 @@ class ShardedPlan(_stream.StreamPlan):
         """
         if fmt_name == "dia":
             return self._bind_dia(bounds)
+        if fmt_name in ("binned", "rowsplit", "ell_coo"):
+            # CSR-equivalent gather layouts (the scale-free tier): their
+            # host-side orderings are whole-matrix properties that do not
+            # survive row/column slicing, so per-shard execution reuses
+            # the CSR packing and the jax CSR kernel inside each shard.
+            fmt_name = "csr"
         if self.b_strategy == "reduce_scatter":
             return self._bind_cols(fmt_name, bounds)
         return self._bind_rows(fmt_name, bounds)

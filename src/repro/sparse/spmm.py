@@ -10,6 +10,13 @@ and the reference semantics for the Pallas TPU kernels in repro.kernels.
              (the paper's CSB, restructured for matrix units).
   dia_spmm   per-diagonal shifted axpy (the diagonal regime realized).
 
+Scale-free-regime variants (PR 8) share the gather/segment-sum algebra
+but traverse different host-prepared orders:
+
+  binned_spmm    slab-major traversal (two-phase propagation blocking).
+  rowsplit_spmm  equal-nnz chunk traversal (merge-path load balance).
+  ell_coo_spmm   vectorized ELL body + COO-tail gather/segment-sum.
+
 All return C = A @ B with C: [n, d].
 """
 from __future__ import annotations
@@ -19,7 +26,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.sparse.formats import BCSRMatrix, CSRMatrix, DIAMatrix, ELLMatrix
+from repro.sparse.formats import (
+    BCSRMatrix, BinnedMatrix, CSRMatrix, DIAMatrix, ELLCOOMatrix, ELLMatrix,
+    RowSplitMatrix)
 
 
 @jax.jit
@@ -111,6 +120,50 @@ def bcsr_spmm_scan(a: BCSRMatrix, b: jnp.ndarray,
     return out.reshape(a.n, d).astype(b.dtype)
 
 
+@jax.jit
+def binned_spmm(a: BinnedMatrix, b: jnp.ndarray) -> jnp.ndarray:
+    """Slab-major gather/segment-sum: same algebra as ``csr_spmm``, but the
+    nonzero stream arrives grouped by B-row slab (ascending columns inside
+    each slab), so consecutive gathers hit one cache/VMEM-resident slab of
+    B — the traversal the binned AI model charges for.
+    """
+    gathered = b[a.cols]                          # [nnz, d] slab-local reuse
+    scaled = gathered * a.data[:, None]           # [nnz, d]
+    return jax.ops.segment_sum(scaled, a.rows, num_segments=a.n)
+
+
+@jax.jit
+def rowsplit_spmm(a: RowSplitMatrix, b: jnp.ndarray) -> jnp.ndarray:
+    """Equal-nnz chunk traversal: padding entries carry value 0 at row 0,
+    so the segment sum absorbs them without masking."""
+    if a.data.shape[0] == 0:
+        return jnp.zeros((a.n, b.shape[1]), dtype=b.dtype)
+    gathered = b[a.cols]                          # [P, d]
+    scaled = gathered * a.data[:, None]           # [P, d]
+    return jax.ops.segment_sum(scaled, a.rows, num_segments=a.n)
+
+
+@jax.jit
+def ell_coo_spmm(a: ELLCOOMatrix, b: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized body (the ELL slot loop up to ``k_cut``) plus a COO-tail
+    gather/segment-sum for the overflow entries of hub rows."""
+
+    def _slot(carry, k):
+        acc = carry
+        cols = a.body_indices[:, k]               # [n]
+        vals = a.body_data[:, k]                  # [n]
+        acc = acc + b[cols] * vals[:, None]
+        return acc, None
+
+    init = jnp.zeros((a.n, b.shape[1]), dtype=b.dtype)
+    out, _ = jax.lax.scan(_slot, init, jnp.arange(a.k_cut))
+    if a.tail_data.shape[0]:
+        tail = b[a.tail_cols] * a.tail_data[:, None]     # [tail_nnz, d]
+        out = out + jax.ops.segment_sum(tail, a.tail_rows,
+                                        num_segments=a.n)
+    return out
+
+
 def dense_spmm(a_dense: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Dense reference (XLA matmul) — the 'vendor peak' comparison point."""
     return a_dense @ b
@@ -121,4 +174,7 @@ IMPLEMENTATIONS = {
     "ell": ell_spmm,
     "bcsr": bcsr_spmm,
     "dia": dia_spmm,
+    "binned": binned_spmm,
+    "rowsplit": rowsplit_spmm,
+    "ell_coo": ell_coo_spmm,
 }

@@ -11,10 +11,20 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
+import sys
 
 import numpy as np
 
 _DEFAULT_MAX_EXAMPLES = 12
+
+# On CI the real hypothesis is a declared dev dependency; falling back to
+# this stub there means the fuzz coverage silently shrank to the fixed
+# example budget.  Say so once, loudly, in the job log.
+if os.environ.get("CI"):
+    print("WARNING: tests/_hypothesis_stub.py is active (real 'hypothesis' "
+          "not importable) — property tests run on a fixed deterministic "
+          "budget instead of full fuzzing.", file=sys.stderr)
 
 
 class _Strategy:

@@ -14,3 +14,22 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
 
 os.environ["REPRO_CALIBRATION_DIR"] = tempfile.mkdtemp(
     prefix="repro-cal-test-")
+
+# Hypothesis profiles (no-op on stripped hosts where only the stub in
+# tests/_hypothesis_stub.py is available): "default" keeps tier-1 fast;
+# "nightly" is the CI fuzz lane's budget, selected with
+# ``--hypothesis-profile=nightly`` (falsifying examples persist under
+# .hypothesis/ and are uploaded as artifacts by the workflow).
+try:
+    from hypothesis import HealthCheck, settings as _hyp_settings
+except ImportError:
+    pass
+else:
+    _hyp_settings.register_profile("default", max_examples=25,
+                                   deadline=None)
+    _hyp_settings.register_profile(
+        "nightly", max_examples=400, deadline=None,
+        print_blob=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    _hyp_settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "default"))

@@ -1,0 +1,169 @@
+"""Cross-kernel differential suite: every registered (format, backend)
+SpMM pair against the dense reference.
+
+This is the pin for the kernel-authoring contract (``docs/kernels.md``):
+any KernelSpec whose ``operand`` is ``"coo"`` must take an arbitrary
+square ``COOMatrix`` — including degenerate ones — and compute
+``C = A @ B`` for any ``d >= 1``.  The suite sweeps
+
+  * structure classes the dispatcher targets (banded / blocked /
+    scale-free / uniform), sampled property-style via ``hypothesis``
+    (or the deterministic stub on stripped hosts);
+  * adversarial shapes: the empty matrix, all-empty rows, a single
+    dense row among empty ones, singleton (degree-1) rows, n=1.
+
+A format converter may reject a matrix with ``ValueError`` (e.g. BCSR's
+divisibility gate) — that is a recorded skip, not a failure; CSR-family
+pairs must never skip, so the suite cannot silently pass by rejecting
+everything.  New kernels registered against the registry are picked up
+automatically — there is nothing to update here when one is added.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                               # stripped environment
+    from _hypothesis_stub import given, settings, st
+
+from repro import sparse
+from repro.core.hardware import HOST_CPU
+from repro.core.patterns import (
+    COOMatrix, banded, blocked, erdos_renyi, scale_free)
+from repro.kernels import registry
+from repro.sparse import formats as fmt
+
+#: Every registered pair that speaks the COO SpMM contract.  Specs with
+#: another operand (the MoE grouped matmul) are excluded by their own
+#: declaration, not by name.
+PAIRS = [(s.format, s.backend) for s in registry.specs()
+         if s.operand == "coo"]
+
+#: Pairs that must never ValueError-skip: CSR itself and the layouts
+#: that start from CSR order (they accept any square COOMatrix).
+NEVER_SKIP = {"csr", "binned", "rowsplit", "ell_coo"}
+
+RTOL = ATOL = 5e-4
+
+
+def _ctx() -> registry.KernelContext:
+    # bcsr_block=8 so blocked structures at test sizes clear the
+    # divisibility gate; interpret resolves to True off-TPU.
+    return registry.KernelContext(hardware=HOST_CPU, bcsr_block=8)
+
+
+def _check_all_pairs(m: COOMatrix, d: int, seed: int = 0) -> None:
+    """Assert every registered COO pair matches the dense reference."""
+    rng = np.random.default_rng(seed)
+    b = jnp.asarray(rng.normal(size=(m.n, d)).astype(np.float32))
+    ref = np.asarray(fmt.coo_to_dense(m)) @ np.asarray(b)
+    ctx = _ctx()
+    failures, skips = [], {}
+    for format, backend in PAIRS:
+        try:
+            out = registry.spmm(m, b, format=format, backend=backend,
+                                ctx=ctx)
+        except ValueError as e:       # converter policy gate: recorded skip
+            skips[(format, backend)] = str(e)
+            continue
+        if not np.allclose(np.asarray(out), ref, rtol=RTOL, atol=ATOL):
+            err = float(np.max(np.abs(np.asarray(out) - ref)))
+            failures.append(f"{format}/{backend}: max|err|={err:.3e}")
+    assert not failures, (
+        f"kernels diverge from dense reference on {m.pattern} "
+        f"(n={m.n}, nnz={m.nnz}, d={d}): {failures}")
+    for (format, backend), reason in skips.items():
+        assert format not in NEVER_SKIP, (
+            f"{format}/{backend} must accept any matrix but skipped: "
+            f"{reason}")
+        assert reason                 # a skip always carries its reason
+
+
+def test_registered_pair_coverage():
+    """The suite must actually cover the full dispatch surface: every
+    dispatcher format on both backends (else a green run means nothing)."""
+    assert set(PAIRS) >= {(f, b) for f in sparse.FORMATS
+                          for b in registry.BACKENDS}
+    assert ("grouped", "pallas") not in PAIRS     # operand="moe" excluded
+
+
+# --------------------------------------------------------------------- #
+# Structure classes, property-style.  n stays in a small fixed set so
+# jit caches hit across examples; d=1 / odd d exercise the kernels'
+# d-padding paths.
+# --------------------------------------------------------------------- #
+
+def _structured(structure: str, n: int, seed: int) -> COOMatrix:
+    if structure == "banded":
+        return banded(n, bandwidth=min(3, n - 1), fill=0.8, seed=seed)
+    if structure == "block":
+        return blocked(n, t=8, num_blocks=max(1, n // 8),
+                       nnz_per_block=20, seed=seed)
+    if structure == "scale_free":
+        return scale_free(n, 4, alpha=2.05, seed=seed)
+    return erdos_renyi(n, 4, seed=seed)           # uniform
+
+
+@settings(max_examples=20, deadline=None)
+@given(structure=st.sampled_from(("banded", "block", "scale_free",
+                                  "uniform")),
+       n=st.sampled_from((8, 24, 64)),
+       d=st.sampled_from((1, 8, 33)),
+       seed=st.integers(0, 4))
+def test_all_pairs_match_dense_on_structures(structure, n, d, seed):
+    _check_all_pairs(_structured(structure, n, seed), d, seed=seed)
+
+
+# --------------------------------------------------------------------- #
+# Adversarial shapes: the degenerate matrices a packer gets wrong first.
+# --------------------------------------------------------------------- #
+
+def _coo(n, rows, cols, vals=None) -> COOMatrix:
+    rows = np.asarray(rows, dtype=np.int32)
+    cols = np.asarray(cols, dtype=np.int32)
+    if vals is None:
+        vals = 1.0 + np.arange(rows.shape[0], dtype=np.float32)
+    return COOMatrix(n=n, rows=rows, cols=cols,
+                     vals=np.asarray(vals, dtype=np.float32),
+                     pattern="adversarial")
+
+
+ADVERSARIAL = {
+    "all_zero": _coo(16, [], []),
+    "n1_empty": _coo(1, [], []),
+    "n1_dense": _coo(1, [0], [0]),
+    # One hub row owning every column; every other row empty (the
+    # rowsplit window and the binned visit map at their most skewed).
+    "single_dense_row": _coo(16, [3] * 16, range(16)),
+    # Exactly one nonzero per row (degree-1 permutation): chunks span
+    # the maximum number of distinct rows.
+    "singleton_rows": _coo(24, range(24),
+                           np.random.default_rng(0).permutation(24)),
+    # Alternating empty rows: row ids are non-contiguous in every chunk.
+    "empty_rows": _coo(32, [r for r in range(32) if r % 2 == 0] * 2,
+                       list(range(0, 32, 2)) + list(range(1, 32, 2))),
+    # Last row/col only: boundary slabs and partial row tiles.
+    "corner": _coo(17, [16, 16, 0], [16, 0, 16]),
+}
+
+
+@pytest.mark.parametrize("case", sorted(ADVERSARIAL))
+@pytest.mark.parametrize("d", [1, 8])
+def test_all_pairs_match_dense_on_adversarial(case, d):
+    _check_all_pairs(ADVERSARIAL[case], d)
+
+
+def test_forced_dispatch_agrees_with_differential_reference():
+    """End-to-end: forcing each always-eligible format through the
+    dispatcher (the path users hit) equals the dense reference too."""
+    m = scale_free(64, 4, alpha=2.1, seed=7)
+    rng = np.random.default_rng(1)
+    b = jnp.asarray(rng.normal(size=(m.n, 8)).astype(np.float32))
+    ref = np.asarray(fmt.coo_to_dense(m)) @ np.asarray(b)
+    for strategy in sorted(NEVER_SKIP):
+        out = sparse.spmm(m, b, strategy=strategy)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=RTOL,
+                                   atol=ATOL, err_msg=strategy)

@@ -113,6 +113,103 @@ def test_csr_kernel_streams_past_vmem():
                                rtol=5e-4, atol=5e-4)
 
 
+@pytest.mark.parametrize("pattern", ["er", "powerlaw"])
+@pytest.mark.parametrize("b_tile", [None, 8, 100])
+def test_binned_kernel_sweep(pattern, b_tile):
+    """Slab-binned kernel across slab sizings, including b_tile=8 (the
+    degenerate one-row-tile slab: maximum binning overhead) and a
+    non-multiple-of-8 slab edge."""
+    from repro.core import scale_free
+    n = 256
+    m = (erdos_renyi(n, 6, seed=11) if pattern == "er"
+         else scale_free(n, 8, alpha=2.05, seed=12))
+    a = sparse.coo_to_csr(m)
+    b = _b(n, 64)
+    out = kernels.binned_spmm(a, b, chunk=32, block_d=32, b_tile=b_tile)
+    expect = ref.csr_ref(a.indptr, a.indices, a.data, b, n=n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_binned_kernel_streams_past_vmem():
+    """Mirror of the CSR acceptance case for the binned tier: with VMEM
+    shrunk below whole-B residency the dispatcher's pallas path must bin
+    into multiple B slabs and still match the oracle."""
+    import dataclasses
+    from repro.core.hardware import TPU_V5E
+    from repro.kernels import registry
+
+    n, d = 512, 64
+    vmem = 96 * 1024
+    hw = dataclasses.replace(TPU_V5E, vmem_bytes=vmem)
+    m = erdos_renyi(n, 8, seed=13)
+    disp = sparse.Dispatcher(hardware=hw, backend="pallas",
+                             calibration=False)
+    plan = disp.plan(m, d, strategy="binned")
+    run = disp.executor(m, plan)
+    layout = next(v for k, v in disp._converted.items()
+                  if k[1] == "layout")
+    assert layout["b_tile"] is not None and layout["b_tile"] < n
+    # chunk_slabs is arrays[2]: >0 means the binning touched >1 B slab.
+    assert int(np.asarray(layout["arrays"][2]).max()) > 0
+    spec = registry.get("binned", "pallas")
+    ctx = registry.KernelContext(hardware=hw)
+    assert spec.vmem_footprint(n, d, ctx) <= vmem
+    a = sparse.coo_to_csr(m)
+    b = _b(n, d)
+    expect = ref.csr_ref(a.indptr, a.indices, a.data, b, n=n)
+    np.testing.assert_allclose(np.asarray(run(b)), np.asarray(expect),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_binned_kernel_degenerate_bins():
+    """Degenerate slab occupancies: all nonzeros in one slab (every
+    other bin empty) and the all-zero matrix (one synthetic zero visit)."""
+    from repro.core.patterns import COOMatrix
+    n = 64
+    # Hub column block: every nonzero lands in B rows [0, 8) — with
+    # b_tile=8 exactly one of eight slabs is ever visited.
+    rng = np.random.default_rng(5)
+    rows = np.arange(n, dtype=np.int32)
+    cols = rng.integers(0, 8, size=n).astype(np.int32)
+    m = COOMatrix(n=n, rows=rows, cols=cols,
+                  vals=np.ones(n, np.float32), pattern="hub_cols")
+    a = sparse.coo_to_csr(m)
+    b = _b(n, 16)
+    out = kernels.binned_spmm(a, b, chunk=32, block_d=16, b_tile=8)
+    expect = ref.csr_ref(a.indptr, a.indices, a.data, b, n=n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=5e-4, atol=5e-4)
+
+    empty = COOMatrix(n=n, rows=np.zeros(0, np.int32),
+                      cols=np.zeros(0, np.int32),
+                      vals=np.zeros(0, np.float32), pattern="empty")
+    ae = sparse.coo_to_csr(empty)
+    oute = kernels.binned_spmm(ae, b, chunk=32, block_d=16, b_tile=8)
+    assert not np.any(np.asarray(oute))
+    outr = kernels.rowsplit_spmm(ae, b, chunk=32, block_d=16)
+    assert not np.any(np.asarray(outr))
+
+
+@pytest.mark.parametrize("chunk", [32, 128])
+def test_rowsplit_kernel_skewed_rows(chunk):
+    """Load-balance stress: one hub row with n nonzeros next to
+    singleton rows — chunks must cross row boundaries correctly, and the
+    epilogue must scatter windowed partials to the right rows."""
+    from repro.core.patterns import COOMatrix
+    n = 128
+    rows = np.concatenate([np.full(n, 3), np.arange(n)]).astype(np.int32)
+    cols = np.concatenate([np.arange(n), np.arange(n)]).astype(np.int32)
+    vals = (1.0 + np.arange(2 * n)).astype(np.float32) / n
+    m = COOMatrix(n=n, rows=rows, cols=cols, vals=vals, pattern="skew")
+    a = sparse.coo_to_csr(m)
+    b = _b(n, 32)
+    out = kernels.rowsplit_spmm(a, b, chunk=chunk, block_d=32)
+    expect = ref.csr_ref(a.indptr, a.indices, a.data, b, n=n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=5e-4, atol=5e-4)
+
+
 def test_csr_kernel_empty_and_ragged_rows():
     """Empty rows still get zeroed C tiles; rows crossing chunk boundaries
     accumulate across grid steps."""

@@ -269,6 +269,25 @@ for name, m in mats.items():
         np.testing.assert_allclose(out, ref, rtol=5e-4, atol=5e-4)
         pairs += 1
 assert pairs == 11, pairs   # 4 structures x 3 strategies - dia/all_gather
+
+# PR 8's scale-free tier, forced through the sharded path: the gather
+# family executes via the per-shard CSR packing, so every B-strategy
+# must be eligible and match dense on 8 devices.
+sf = mats["scale_free"]
+ref = np.asarray(sparse.coo_to_dense(sf)) @ np.asarray(b)
+for fmt_name in ("binned", "rowsplit", "ell_coo"):
+    for strat in sparse.B_STRATEGIES:
+        p = sparse.plan(sf, sparse.BSpec(d=d), mesh=mesh,
+                        strategy=fmt_name, b_strategy=strat)
+        assert p.num_shards == 8
+        assert p.dispatch.chosen == fmt_name
+        # Audit contract: every ineligible strategy eval says why.
+        for e in p.strategy_evals:
+            assert e.eligible or e.skip_reason, e.strategy
+        out = np.asarray(p.execute(b))
+        np.testing.assert_allclose(out, ref, rtol=5e-4, atol=5e-4)
+        pairs += 1
+assert pairs == 20, pairs   # 11 + 3 new formats x 3 strategies
 print("SHARD-8DEV-OK")
 """
 

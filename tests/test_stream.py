@@ -111,7 +111,9 @@ def test_reuse_horizon_can_flip_the_chosen_format():
     disp = sparse.Dispatcher(
         hardware=hw, backend="jax",
         efficiency={"csr": (0.02, 0.0), "bcsr": (0.30, 0.0),
-                    "ell": (0.001, 0.0), "dia": (0.001, 0.0)})
+                    "ell": (0.001, 0.0), "dia": (0.001, 0.0),
+                    "binned": (0.001, 0.0), "rowsplit": (0.001, 0.0),
+                    "ell_coo": (0.001, 0.0)})
     short = sparse.plan(m, sparse.BSpec(d=16, reuse=1), dispatcher=disp)
     long = sparse.plan(m, sparse.BSpec(d=16, reuse=10_000), dispatcher=disp)
     assert short.chosen == "csr"
@@ -178,7 +180,9 @@ def test_replan_at_observed_horizon_can_flip_format():
     disp = sparse.Dispatcher(
         hardware=hw, backend="jax", calibration=False,
         efficiency={"csr": (0.02, 0.0), "bcsr": (0.30, 0.0),
-                    "ell": (0.001, 0.0), "dia": (0.001, 0.0)})
+                    "ell": (0.001, 0.0), "dia": (0.001, 0.0),
+                    "binned": (0.001, 0.0), "rowsplit": (0.001, 0.0),
+                    "ell_coo": (0.001, 0.0)})
     plan = sparse.plan(m, sparse.BSpec(d=16, reuse=1), dispatcher=disp)
     assert plan.chosen == "csr"
     replanned = plan.replan(10_000)
