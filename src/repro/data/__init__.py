@@ -1,1 +1,25 @@
-"""repro.data"""
+"""repro.data: dataset pipeline, matrix corpus, and learned dispatch.
+
+``pipeline`` feeds the training stack; ``corpus`` loads real-matrix
+files (``.smtx`` / Matrix Market) with a vendored offline sample set;
+``dtree`` is the SpChar-style decision-tree dispatch fallback fitted
+from corpus harvests.
+"""
+from repro.data.corpus import (          # noqa: F401
+    CorpusDownloadDisabled,
+    CorpusEntry,
+    corpus_entries,
+    load_corpus,
+    load_matrix,
+    load_mtx,
+    load_smtx,
+    vendored_entries,
+    write_mtx,
+    write_smtx,
+)
+from repro.data.dtree import (           # noqa: F401
+    FEATURES,
+    DecisionTree,
+    DispatchTreeStore,
+    features_from_report,
+)

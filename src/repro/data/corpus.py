@@ -1,0 +1,345 @@
+"""DLMC/SuiteSparse-style real-matrix corpus layer.
+
+Every benchmark and claim gate in this repo historically ran on the
+synthetic generators in ``repro.core.patterns``; the source paper's whole
+point is that *real* SuiteSparse-grouped structures (block, banded,
+scale-free, uniform) are what break any single roofline model.  This
+module is the dataset layer that closes that gap:
+
+  loaders     ``load_smtx`` (the DLMC ``.smtx`` CSR-text format used by
+              pytorch's ``benchmarks/sparse/dlmc`` suite) and
+              ``load_mtx`` (Matrix Market coordinate format, the
+              SuiteSparse interchange format); both return the repo's
+              native ``COOMatrix``, square-padded when the source is
+              rectangular.
+  corpus      ``corpus_entries()`` enumerates the active corpus — the
+              directory named by ``$REPRO_CORPUS_DIR`` when set, else
+              the small vendored sample set shipped inside the package
+              (``corpus_samples/``, all four paper groups) so CI and
+              tests never touch the network.
+  downloader  ``download(url, dest)`` is *opt-in*: hermetic by default,
+              it refuses to open a socket unless
+              ``$REPRO_CORPUS_ALLOW_DOWNLOAD=1`` (or ``allow=True``) —
+              a deliberate guard so no test or CI lane can depend on
+              network reachability by accident.
+
+File naming carries the paper group: ``<group>__<name>.smtx|.mtx`` with
+``group`` one of :data:`GROUPS`.  ``repro.core.patterns.fit_generator``
+turns a corpus matrix's measured statistics back into a synthetic
+generator, so benchmark sweeps can scale a real structure up to
+out-of-cache sizes.  See ``docs/corpus.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.patterns import COOMatrix
+
+#: The paper's four structure groups; corpus filenames are
+#: ``<group>__<name>.<ext>`` and the classifier golden tests assert each
+#: vendored matrix lands in its filename's group.
+GROUPS: Tuple[str, ...] = ("random", "diagonal", "blocked", "scale_free")
+
+#: The vendored sample set shipped with the package (hermetic CI corpus).
+SAMPLES_DIR = pathlib.Path(__file__).resolve().parent / "corpus_samples"
+
+#: Loader dispatch by suffix.
+_SUFFIXES = (".smtx", ".mtx")
+
+
+class CorpusDownloadDisabled(RuntimeError):
+    """Raised when ``download`` is called without the opt-in flag."""
+
+
+def _finalize_loaded(n: int, rows: np.ndarray, cols: np.ndarray,
+                     vals: np.ndarray, pattern: str,
+                     meta: dict) -> COOMatrix:
+    """Sort row-major, deduplicate (first value wins), keep real values."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float64)
+    if np.any((rows < 0) | (rows >= n) | (cols < 0) | (cols >= n)):
+        raise ValueError(f"{meta.get('source', 'corpus matrix')}: index "
+                         f"out of range for n={n}")
+    lin = rows * n + cols
+    order = np.argsort(lin, kind="stable")
+    lin, vals = lin[order], vals[order]
+    keep = np.concatenate([[True], np.diff(lin) > 0])
+    lin, vals = lin[keep], vals[keep]
+    return COOMatrix(n=n, rows=(lin // n).astype(np.int32),
+                     cols=(lin % n).astype(np.int32), vals=vals,
+                     pattern=pattern, meta=meta)
+
+
+def _synth_vals(nnz: int, seed: int = 0) -> np.ndarray:
+    """Deterministic values for pattern-only sources (no stored values)."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.5, 1.5, size=nnz)
+
+
+def load_smtx(path: os.PathLike, pattern: str = "corpus") -> COOMatrix:
+    """Load a DLMC ``.smtx`` file (CSR text: shape line, ptr line, col line).
+
+    The format (pytorch ``benchmarks/sparse/dlmc``): line 1 is
+    ``nrows, ncols, nnz`` (comma separated), line 2 the ``nrows + 1``
+    row pointers, line 3 the ``nnz`` column indices.  DLMC stores
+    patterns only, so values are synthesized deterministically.
+    Rectangular sources are square-padded to ``n = max(nrows, ncols)``
+    (the repo's SpMM stack is square); the true shape is kept in
+    ``meta``.
+
+    Args:
+        path: the ``.smtx`` file.
+        pattern: the ``COOMatrix.pattern`` tag to attach.
+
+    Returns:
+        The matrix as a sorted, deduplicated ``COOMatrix``.
+
+    Raises:
+        ValueError: on a malformed header, pointer, or index section.
+    """
+    path = pathlib.Path(path)
+    text = path.read_text(encoding="utf-8").strip().splitlines()
+    if len(text) < 2:
+        raise ValueError(f"{path.name}: expected 3 lines (shape, row "
+                         f"pointers, column indices), got {len(text)}")
+    try:
+        nrows, ncols, nnz = (int(tok) for tok in text[0].replace(
+            ",", " ").split())
+    except ValueError:
+        raise ValueError(f"{path.name}: malformed shape line "
+                         f"{text[0]!r}") from None
+    ptr = np.array(text[1].split(), dtype=np.int64)
+    cols = (np.array(text[2].split(), dtype=np.int64)
+            if len(text) > 2 and text[2].strip() else
+            np.zeros(0, dtype=np.int64))
+    if ptr.shape[0] != nrows + 1 or ptr[0] != 0 or ptr[-1] != nnz:
+        raise ValueError(f"{path.name}: row-pointer line inconsistent "
+                         f"with shape header ({ptr.shape[0]} ptrs, "
+                         f"expected {nrows + 1}; ptr[-1]="
+                         f"{ptr[-1] if ptr.size else 'none'} vs nnz={nnz})")
+    if cols.shape[0] != nnz:
+        raise ValueError(f"{path.name}: {cols.shape[0]} column indices, "
+                         f"header says nnz={nnz}")
+    rows = np.repeat(np.arange(nrows, dtype=np.int64), np.diff(ptr))
+    n = max(nrows, ncols)
+    meta = {"source": path.name, "format": "smtx",
+            "nrows": nrows, "ncols": ncols}
+    return _finalize_loaded(n, rows, cols, _synth_vals(nnz), pattern, meta)
+
+
+def load_mtx(path: os.PathLike, pattern: str = "corpus") -> COOMatrix:
+    """Load a Matrix Market coordinate file (SuiteSparse interchange).
+
+    Supports ``real`` / ``integer`` / ``pattern`` fields and the
+    ``general`` / ``symmetric`` symmetries (symmetric entries are
+    mirrored; the diagonal is not duplicated).  Indices are 1-based per
+    the spec.  Rectangular sources are square-padded to
+    ``n = max(nrows, ncols)``.
+
+    Args:
+        path: the ``.mtx`` file.
+        pattern: the ``COOMatrix.pattern`` tag to attach.
+
+    Returns:
+        The matrix as a sorted, deduplicated ``COOMatrix``.
+
+    Raises:
+        ValueError: on a malformed banner, an unsupported field or
+            symmetry, or an entry-count mismatch.
+    """
+    path = pathlib.Path(path)
+    with open(path, encoding="utf-8") as f:
+        banner = f.readline().strip().lower().split()
+        if (len(banner) < 5 or banner[0] != "%%matrixmarket"
+                or banner[2] != "coordinate"):
+            raise ValueError(f"{path.name}: unsupported MatrixMarket "
+                             f"banner {' '.join(banner)!r} (only "
+                             f"'matrix coordinate' is supported)")
+        field, symmetry = banner[3], banner[4]
+        if field not in ("real", "integer", "pattern"):
+            raise ValueError(f"{path.name}: unsupported field {field!r}")
+        if symmetry not in ("general", "symmetric"):
+            raise ValueError(f"{path.name}: unsupported symmetry "
+                             f"{symmetry!r}")
+        line = f.readline()
+        while line.startswith("%"):
+            line = f.readline()
+        try:
+            nrows, ncols, nnz = (int(tok) for tok in line.split())
+        except ValueError:
+            raise ValueError(f"{path.name}: malformed size line "
+                             f"{line!r}") from None
+        body = np.array(f.read().split(), dtype=np.float64)
+    per = 2 if field == "pattern" else 3
+    if body.shape[0] != per * nnz:
+        raise ValueError(f"{path.name}: {body.shape[0] // per} entries, "
+                         f"size line says {nnz}")
+    body = body.reshape(nnz, per)
+    rows = body[:, 0].astype(np.int64) - 1
+    cols = body[:, 1].astype(np.int64) - 1
+    vals = body[:, 2] if per == 3 else _synth_vals(nnz)
+    if symmetry == "symmetric":
+        off = rows != cols
+        rows, cols = (np.concatenate([rows, cols[off]]),
+                      np.concatenate([cols, rows[off]]))
+        vals = np.concatenate([vals, vals[off]])
+    n = max(nrows, ncols)
+    meta = {"source": path.name, "format": "mtx",
+            "nrows": nrows, "ncols": ncols, "symmetry": symmetry}
+    return _finalize_loaded(n, rows, cols, vals, pattern, meta)
+
+
+def load_matrix(path: os.PathLike, pattern: str = "corpus") -> COOMatrix:
+    """Load ``path`` by suffix (``.smtx`` or ``.mtx``)."""
+    path = pathlib.Path(path)
+    if path.suffix == ".smtx":
+        return load_smtx(path, pattern)
+    if path.suffix == ".mtx":
+        return load_mtx(path, pattern)
+    raise ValueError(f"unknown corpus suffix {path.suffix!r} for "
+                     f"{path.name}; expected one of {_SUFFIXES}")
+
+
+def write_smtx(m: COOMatrix, path: os.PathLike) -> pathlib.Path:
+    """Write ``m`` as a DLMC ``.smtx`` pattern file (values dropped)."""
+    path = pathlib.Path(path)
+    ptr = m.row_ptr()
+    lines = [f"{m.n}, {m.n}, {m.nnz}",
+             " ".join(str(int(p)) for p in ptr),
+             " ".join(str(int(c)) for c in m.cols)]
+    path.write_text("\n".join(lines) + "\n", encoding="utf-8")
+    return path
+
+
+def write_mtx(m: COOMatrix, path: os.PathLike, *,
+              values: bool = True) -> pathlib.Path:
+    """Write ``m`` as a Matrix Market coordinate file (1-based, general)."""
+    path = pathlib.Path(path)
+    field = "real" if values else "pattern"
+    out = [f"%%MatrixMarket matrix coordinate {field} general",
+           f"% written by repro.data.corpus ({m.pattern})",
+           f"{m.n} {m.n} {m.nnz}"]
+    if values:
+        out += [f"{r + 1} {c + 1} {v:.6g}"
+                for r, c, v in zip(m.rows, m.cols, m.vals)]
+    else:
+        out += [f"{r + 1} {c + 1}" for r, c in zip(m.rows, m.cols)]
+    path.write_text("\n".join(out) + "\n", encoding="utf-8")
+    return path
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusEntry:
+    """One corpus matrix: its paper group and where it loads from."""
+
+    name: str          # file stem after the group prefix
+    group: str         # one of GROUPS
+    path: pathlib.Path
+
+    def load(self) -> COOMatrix:
+        """Load the matrix; ``pattern`` is tagged with the group."""
+        m = load_matrix(self.path, pattern=self.group)
+        return dataclasses.replace(m, meta={**m.meta, "group": self.group,
+                                            "corpus_name": self.name})
+
+
+def _scan(root: pathlib.Path) -> Tuple[CorpusEntry, ...]:
+    entries = []
+    for path in sorted(root.glob("*")):
+        if path.suffix not in _SUFFIXES or "__" not in path.stem:
+            continue
+        group, name = path.stem.split("__", 1)
+        if group not in GROUPS:
+            raise ValueError(f"corpus file {path.name}: group {group!r} "
+                             f"not in {GROUPS}")
+        entries.append(CorpusEntry(name=name, group=group, path=path))
+    return tuple(entries)
+
+
+def vendored_entries() -> Tuple[CorpusEntry, ...]:
+    """The sample set shipped inside the package (no network, ever)."""
+    return _scan(SAMPLES_DIR)
+
+
+def corpus_entries(
+        root: Optional[os.PathLike] = None) -> Tuple[CorpusEntry, ...]:
+    """Enumerate the active corpus.
+
+    Resolution order: an explicit ``root`` argument, then the directory
+    named by ``$REPRO_CORPUS_DIR`` (the opt-in hook for a real
+    downloaded DLMC/SuiteSparse tree), then the vendored sample set.
+    Files must follow the ``<group>__<name>.smtx|.mtx`` convention;
+    anything else in the directory is ignored.
+
+    Args:
+        root: optional corpus directory override.
+
+    Returns:
+        The discovered :class:`CorpusEntry` tuple (possibly empty for an
+        empty override directory — never empty for the vendored set).
+    """
+    root = root or os.environ.get("REPRO_CORPUS_DIR")
+    if root:
+        return _scan(pathlib.Path(root))
+    return vendored_entries()
+
+
+def download(url: str, dest: os.PathLike, *,
+             allow: Optional[bool] = None,
+             timeout: float = 60.0) -> pathlib.Path:
+    """Fetch one corpus file — **opt-in**; hermetic by default.
+
+    Refuses to touch the network unless explicitly allowed, so nothing
+    in the test or CI path can grow an accidental network dependency:
+    the vendored samples are the only corpus CI ever sees.
+
+    Args:
+        url: source URL (e.g. a SuiteSparse or DLMC matrix file).
+        dest: local path to write; parent directories are created.
+            An existing file is returned as-is without any network use.
+        allow: ``True`` to permit the fetch; defaults to the
+            ``$REPRO_CORPUS_ALLOW_DOWNLOAD=1`` environment opt-in.
+        timeout: socket timeout in seconds.
+
+    Returns:
+        The local path.
+
+    Raises:
+        CorpusDownloadDisabled: when called without the opt-in.
+    """
+    dest = pathlib.Path(dest)
+    if dest.is_file():
+        return dest
+    if allow is None:
+        allow = os.environ.get("REPRO_CORPUS_ALLOW_DOWNLOAD") == "1"
+    if not allow:
+        raise CorpusDownloadDisabled(
+            f"refusing to download {url}: the corpus layer is hermetic "
+            f"by default (vendored samples only).  Set "
+            f"REPRO_CORPUS_ALLOW_DOWNLOAD=1 (or pass allow=True) and "
+            f"point REPRO_CORPUS_DIR at the download directory to opt "
+            f"in.")
+    import urllib.request
+    dest.parent.mkdir(parents=True, exist_ok=True)
+    tmp = dest.with_suffix(dest.suffix + ".part")
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        tmp.write_bytes(r.read())
+    tmp.replace(dest)
+    return dest
+
+
+def load_corpus(root: Optional[os.PathLike] = None,
+                groups: Optional[Sequence[str]] = None):
+    """Load the active corpus as ``{name: COOMatrix}`` (group-filtered)."""
+    out = {}
+    for e in corpus_entries(root):
+        if groups and e.group not in groups:
+            continue
+        out[e.name] = e.load()
+    return out

@@ -46,6 +46,8 @@ import numpy as np
 
 from repro.core.calibrate import CalibrationStore
 from repro.core.classify import StructureReport, block_stats, classify
+from repro.data.dtree import (DecisionTree, DispatchTreeStore,
+                              features_from_report)
 from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec
 from repro.core.roofline import ComputeCeiling
 from repro.core import sparsity_models as sm
@@ -122,6 +124,14 @@ class DispatchPlan:
     #: or a calibration predating the kernel registry version); None when
     #: the store is silent.  Rendered by :meth:`summary`.
     calibration_note: Optional[str] = None
+    #: Who made the final call: ``"analytic"`` (the roofline ranking) or
+    #: ``"tree"`` (the fitted dispatch tree, consulted because the
+    #: analytic top two were within ``tree_margin`` of each other).
+    #: Provenance, exactly like ``ceiling_source`` for ceilings.
+    decision_source: str = "analytic"
+    #: The tree's split trail (``feature<=thr`` ... ``leaf:fmt(n=..)``)
+    #: when ``decision_source == "tree"``; empty otherwise.
+    decision_path: Tuple[str, ...] = ()
 
     @property
     def skips(self) -> Dict[str, str]:
@@ -156,7 +166,8 @@ class DispatchPlan:
         """Render the decision as a human-readable multi-line table."""
         lines = [f"DispatchPlan(regime={self.regime}, d={self.d}, "
                  f"backend={self.backend}, hw={self.hardware}, "
-                 f"reuse={self.reuse}) -> {self.chosen}"]
+                 f"reuse={self.reuse}, decision={self.decision_source})"
+                 f" -> {self.chosen}"]
         for c in self.candidates:
             mark = "*" if c.format == self.chosen else " "
             if c.predicted_gflops is not None:
@@ -167,6 +178,8 @@ class DispatchPlan:
                 perf = "(not modeled)"
             tail = "" if c.eligible else f"  SKIP: {c.skip_reason}"
             lines.append(f" {mark} {c.format:4s} {perf}{tail}")
+        if self.decision_path:
+            lines.append(" ~ tree: " + " -> ".join(self.decision_path))
         if self.calibration_note:
             lines.append(f" ! {self.calibration_note}")
         return "\n".join(lines)
@@ -205,9 +218,13 @@ class Dispatcher:
                  bcsr_max_inflation: float = 64.0,
                  efficiency: Optional[Dict[str, Tuple[float, float]]] = None,
                  calibration=None,
+                 tree=None, tree_margin: float = 0.10,
                  sizeof_val: int = 4, sizeof_idx: int = 4):
         if backend not in ("auto", "jax", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
+        if not 0.0 <= tree_margin < 1.0:
+            raise ValueError(f"tree_margin must be in [0, 1), "
+                             f"got {tree_margin}")
         self.backend = backend
         self.hardware = hardware
         self.reuse = reuse
@@ -223,8 +240,19 @@ class Dispatcher:
         #: import); a ``CalibrationStore`` to use explicitly; ``False``
         #: disables calibration lookup (the calibrator itself does this).
         self.calibration = calibration
+        #: Learned dispatch fallback: ``None`` = the persisted tree from
+        #: :class:`repro.data.dtree.DispatchTreeStore` (resolved lazily,
+        #: like ``calibration``); a ``DecisionTree`` to use explicitly;
+        #: ``False`` disables tree consultation entirely.  The tree is
+        #: only consulted under ``strategy="auto"`` when the analytic
+        #: top-two candidates sit within ``tree_margin`` (relative
+        #: amortized-GFLOP/s gap) — the roofline model stays
+        #: authoritative wherever it is confident.
+        self.tree = tree
+        self.tree_margin = tree_margin
         self._cal_cache: Dict[str, Dict[str, Tuple[float, float]]] = {}
         self._note_cache: Dict[tuple, Optional[str]] = {}
+        self._tree_cache: Dict[str, Optional[DecisionTree]] = {}
         self.sizeof_val = sizeof_val
         self.sizeof_idx = sizeof_idx
         self._plans: Dict[tuple, DispatchPlan] = {}
@@ -312,11 +340,30 @@ class Dispatcher:
         return self._note_cache[key]
 
     def refresh_calibration(self) -> None:
-        """Drop cached calibration lookups and plans (e.g. after a new
-        ``repro.core.calibrate.calibrate(..., store=...)`` run)."""
+        """Drop cached calibration/tree lookups and plans (e.g. after a
+        new ``repro.core.calibrate.calibrate(..., store=...)`` run or a
+        ``tools/harvest_dispatch.py`` refit)."""
         self._cal_cache.clear()
         self._note_cache.clear()
+        self._tree_cache.clear()
         self._plans.clear()
+
+    def _tree(self, backend: str) -> Optional[DecisionTree]:
+        """Resolve the dispatch tree for ``backend`` (None = no tree).
+
+        Mirrors :meth:`_calibrated`: an explicit ``tree=`` instance wins,
+        ``tree=False`` disables lookup, and ``tree=None`` loads (and
+        caches) the persisted ``dispatch_tree-<backend>.json`` from the
+        default :class:`DispatchTreeStore` — absent or stale files
+        resolve to ``None`` and dispatch stays purely analytic.
+        """
+        if self.tree is False:
+            return None
+        if isinstance(self.tree, DecisionTree):
+            return self.tree
+        if backend not in self._tree_cache:
+            self._tree_cache[backend] = DispatchTreeStore().load(backend)
+        return self._tree_cache[backend]
 
     def _ceiling(self, format: str, hw: HardwareSpec,
                  backend: str) -> ComputeCeiling:
@@ -529,6 +576,12 @@ class Dispatcher:
                 expensive one-time conversions (e.g. BCSR's dense blocks)
                 win on amortized throughput.
 
+        Under ``strategy="auto"``, when a fitted dispatch tree is
+        available (see the ``tree`` constructor arg) and the analytic
+        top-two candidates sit within ``tree_margin`` of each other, the
+        tree breaks the tie; the plan records ``decision_source="tree"``
+        and the tree's ``decision_path``.
+
         Returns:
             The cached :class:`DispatchPlan` with per-candidate predictions.
 
@@ -545,7 +598,12 @@ class Dispatcher:
         reuse = self.reuse if reuse is None else reuse
         backend = self._resolve_backend()
         hw = self._resolve_hardware(backend)
-        key = (self._track(m), d, strategy, reuse, backend, hw.name)
+        # The fitted tree is part of the plan identity: refitting (or
+        # deleting) the persisted tree must not replay stale decisions.
+        tree = self._tree(backend) if strategy == "auto" else None
+        tree_token = tree.fingerprint() if tree is not None else "none"
+        key = (self._track(m), d, strategy, reuse, backend, hw.name,
+               tree_token, self.tree_margin)
         if key in self._plans:
             return self._plans[key]
 
@@ -565,12 +623,35 @@ class Dispatcher:
                 amortized_gflops=amort, conversion_bytes=conv,
                 params=params, ceiling_source=source))
 
+        decision_source, decision_path = "analytic", ()
         if strategy == "auto":
             viable = [c for c in cands
                       if c.eligible and c.amortized_gflops is not None]
             if not viable:   # CSR is always eligible; belt and braces
                 viable = [c for c in cands if c.format == "csr"]
-            chosen = max(viable, key=lambda c: c.amortized_gflops).format
+            ranked = sorted(viable, key=lambda c: c.amortized_gflops or 0.0,
+                            reverse=True)
+            chosen = ranked[0].format
+            # Learned fallback (SpChar): only where the analytic model
+            # cannot separate its top two candidates.  The tree's pick
+            # must itself be within the margin of the analytic winner —
+            # the tree breaks ties, it never overrules a confident
+            # roofline ranking — so any tree-induced regression is
+            # bounded by tree_margin by construction.
+            if tree is not None and len(ranked) >= 2:
+                top = ranked[0].amortized_gflops or 0.0
+                gap = (top - (ranked[1].amortized_gflops or 0.0)) \
+                    / max(top, 1e-12)
+                if gap <= self.tree_margin:
+                    x = features_from_report(report, d)
+                    pick = tree.predict(x)
+                    near = {c.format for c in ranked
+                            if top - (c.amortized_gflops or 0.0)
+                            <= self.tree_margin * top}
+                    if pick in near:
+                        chosen = pick
+                        decision_source = "tree"
+                        decision_path = tree.decision_path(x)
         else:
             forced = next(c for c in cands if c.format == strategy)
             if not forced.eligible:
@@ -582,7 +663,8 @@ class Dispatcher:
             chosen=chosen, strategy=strategy, regime=report.regime, d=d,
             reuse=reuse, backend=backend, hardware=hw.name,
             candidates=tuple(cands),
-            calibration_note=self._staleness(hw, backend))
+            calibration_note=self._staleness(hw, backend),
+            decision_source=decision_source, decision_path=decision_path)
         self._plans[key] = plan
         return plan
 

@@ -1,0 +1,229 @@
+"""Corpus layer: loaders, vendored samples, hermeticity, fit_generator.
+
+The vendored sample set is the hermetic stand-in for DLMC/SuiteSparse;
+these tests pin (a) that both file formats round-trip through the real
+serializers, (b) that every vendored matrix classifies into its
+filename's paper group — including the transposed column-hub fixture
+that exposed the row-only classifier bug — and (c) that nothing in the
+corpus path can open a network socket unless explicitly opted in.
+"""
+import socket
+
+import numpy as np
+import pytest
+
+from repro.core import patterns
+from repro.core.classify import classify
+from repro.core.patterns import fit_generator
+from repro.data import corpus
+
+
+@pytest.fixture
+def no_network(monkeypatch):
+    """Make any socket creation an immediate test failure."""
+    def _blocked(*a, **k):
+        raise AssertionError("network access attempted in hermetic test")
+    monkeypatch.setattr(socket, "socket", _blocked)
+    monkeypatch.delenv("REPRO_CORPUS_ALLOW_DOWNLOAD", raising=False)
+
+
+# --------------------------------------------------------------------- #
+# Loaders
+# --------------------------------------------------------------------- #
+
+def test_smtx_round_trip(tmp_path):
+    m = patterns.erdos_renyi(128, 6, seed=3)
+    path = corpus.write_smtx(m, tmp_path / "random__rt.smtx")
+    loaded = corpus.load_smtx(path)
+    assert loaded.n == m.n and loaded.nnz == m.nnz
+    np.testing.assert_array_equal(loaded.rows, m.rows)
+    np.testing.assert_array_equal(loaded.cols, m.cols)
+    assert loaded.meta["format"] == "smtx"
+    # smtx is pattern-only: values are synthesized, not preserved.
+    assert np.all(loaded.vals > 0)
+
+
+def test_mtx_round_trip_with_values(tmp_path):
+    m = patterns.banded(96, 3, fill=0.8, seed=4)
+    path = corpus.write_mtx(m, tmp_path / "diagonal__rt.mtx")
+    loaded = corpus.load_mtx(path)
+    np.testing.assert_array_equal(loaded.rows, m.rows)
+    np.testing.assert_array_equal(loaded.cols, m.cols)
+    np.testing.assert_allclose(loaded.vals, m.vals, rtol=1e-5)
+
+
+def test_mtx_pattern_field(tmp_path):
+    m = patterns.erdos_renyi(64, 4, seed=5)
+    path = corpus.write_mtx(m, tmp_path / "random__p.mtx", values=False)
+    loaded = corpus.load_mtx(path)
+    np.testing.assert_array_equal(loaded.cols, m.cols)
+    assert np.all(loaded.vals > 0)
+
+
+def test_mtx_symmetric_mirrors_off_diagonal(tmp_path):
+    path = tmp_path / "sym.mtx"
+    path.write_text(
+        "%%MatrixMarket matrix coordinate real symmetric\n"
+        "% lower triangle only\n"
+        "3 3 3\n"
+        "1 1 2.0\n"
+        "2 1 5.0\n"
+        "3 2 7.0\n")
+    m = corpus.load_mtx(path)
+    dense = np.zeros((3, 3))
+    dense[m.rows, m.cols] = m.vals
+    np.testing.assert_allclose(dense, dense.T)
+    assert m.nnz == 5                       # diagonal not duplicated
+    assert dense[0, 0] == 2.0
+    assert dense[1, 0] == dense[0, 1] == 5.0
+    assert dense[2, 1] == dense[1, 2] == 7.0
+
+
+def test_smtx_rectangular_square_pads(tmp_path):
+    path = tmp_path / "rect.smtx"
+    # 2 x 5, nnz=3: rows [0,0,1] cols [0,4,2]
+    path.write_text("2, 5, 3\n0 2 3\n0 4 2\n")
+    m = corpus.load_smtx(path)
+    assert m.n == 5
+    assert m.meta["nrows"] == 2 and m.meta["ncols"] == 5
+    np.testing.assert_array_equal(m.rows, [0, 0, 1])
+    np.testing.assert_array_equal(m.cols, [0, 4, 2])
+
+
+def test_loader_rejects_malformed(tmp_path):
+    bad_ptr = tmp_path / "bad.smtx"
+    bad_ptr.write_text("4, 4, 2\n0 1\n0 1\n")       # 2 ptrs, expected 5
+    with pytest.raises(ValueError, match="row-pointer"):
+        corpus.load_smtx(bad_ptr)
+    bad_banner = tmp_path / "bad.mtx"
+    bad_banner.write_text("%%MatrixMarket matrix array real general\n1 1\n")
+    with pytest.raises(ValueError, match="banner"):
+        corpus.load_mtx(bad_banner)
+    with pytest.raises(ValueError, match="suffix"):
+        corpus.load_matrix(tmp_path / "x.csv")
+
+
+def test_loader_dedups_and_sorts(tmp_path):
+    path = tmp_path / "dup.mtx"
+    path.write_text(
+        "%%MatrixMarket matrix coordinate real general\n"
+        "2 2 3\n2 2 9.0\n1 1 1.0\n1 1 4.0\n")
+    m = corpus.load_mtx(path)
+    assert m.nnz == 2                       # duplicate (1,1) collapsed
+    np.testing.assert_array_equal(m.rows, [0, 1])
+    assert m.vals[0] == 1.0                 # first value wins
+
+
+# --------------------------------------------------------------------- #
+# Vendored corpus (hermetic)
+# --------------------------------------------------------------------- #
+
+def test_vendored_set_covers_all_groups(no_network):
+    entries = corpus.vendored_entries()
+    assert len(entries) >= 8
+    assert {e.group for e in entries} == set(corpus.GROUPS)
+    assert {e.path.suffix for e in entries} == {".smtx", ".mtx"}
+
+
+@pytest.mark.parametrize(
+    "entry", corpus.vendored_entries(),
+    ids=lambda e: f"{e.group}__{e.name}")
+def test_vendored_matrix_classifies_into_its_group(entry, no_network):
+    """Golden regime labels — includes the transposed column-hub fixture
+    (``scale_free__colhub_192``) that pins the row-only classifier bug."""
+    m = entry.load()
+    report = classify(m)
+    assert report.regime == entry.group, report.stats
+    assert m.meta["group"] == entry.group
+
+
+def test_colhub_fixture_detects_column_axis(no_network):
+    entry = next(e for e in corpus.vendored_entries()
+                 if e.name == "colhub_192")
+    report = classify(entry.load())
+    assert report.regime == "scale_free"
+    assert report.stats["tail_axis"] == "col"
+    assert report.stats["col_gini"] > report.stats["row_gini"]
+
+
+def test_corpus_entries_precedence(tmp_path, monkeypatch):
+    m = patterns.erdos_renyi(32, 2, seed=0)
+    corpus.write_smtx(m, tmp_path / "random__only.smtx")
+    monkeypatch.setenv("REPRO_CORPUS_DIR", str(tmp_path))
+    entries = corpus.corpus_entries()
+    assert [e.name for e in entries] == ["only"]
+    # Explicit root beats the environment.
+    other = tmp_path / "other"
+    other.mkdir()
+    assert corpus.corpus_entries(other) == ()
+    monkeypatch.delenv("REPRO_CORPUS_DIR")
+    assert len(corpus.corpus_entries()) >= 8       # vendored fallback
+
+
+def test_scan_rejects_unknown_group(tmp_path):
+    (tmp_path / "bogus__x.smtx").write_text("1, 1, 0\n0 0\n\n")
+    with pytest.raises(ValueError, match="bogus"):
+        corpus.corpus_entries(tmp_path)
+
+
+def test_load_corpus_group_filter(no_network):
+    mats = corpus.load_corpus(groups=["diagonal"])
+    assert mats and all(m.meta["group"] == "diagonal"
+                        for m in mats.values())
+
+
+# --------------------------------------------------------------------- #
+# Downloader opt-in
+# --------------------------------------------------------------------- #
+
+def test_download_refuses_without_opt_in(tmp_path, no_network):
+    with pytest.raises(corpus.CorpusDownloadDisabled,
+                       match="hermetic by default"):
+        corpus.download("https://example.com/m.mtx", tmp_path / "m.mtx")
+
+
+def test_download_returns_existing_file_without_network(tmp_path,
+                                                        no_network):
+    dest = tmp_path / "have.mtx"
+    dest.write_text("cached")
+    # No opt-in, sockets blocked: the cached file short-circuits both.
+    assert corpus.download("https://example.com/x", dest) == dest
+
+
+def test_download_opt_in_fetches_file_url(tmp_path):
+    src = tmp_path / "src.smtx"
+    src.write_text("1, 1, 0\n0 0\n\n")
+    dest = tmp_path / "fetched.smtx"
+    out = corpus.download(src.as_uri(), dest, allow=True)
+    assert out == dest and dest.read_text() == src.read_text()
+    assert not dest.with_suffix(".smtx.part").exists()
+
+
+# --------------------------------------------------------------------- #
+# fit_generator: corpus -> synthetic bridge
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("gen", [
+    lambda: patterns.erdos_renyi(256, 8, seed=1),
+    lambda: patterns.banded(256, 2, fill=1.0, seed=4),
+    lambda: patterns.blocked(256, t=32, num_blocks=16, nnz_per_block=256,
+                             seed=6),
+    lambda: patterns.scale_free(256, 8, alpha=2.1, seed=8),
+])
+def test_fit_generator_preserves_regime(gen):
+    src = gen()
+    report = classify(src)
+    fitted = fit_generator(report, seed=2)
+    assert fitted.meta["fitted_from"]["regime"] == report.regime
+    assert classify(fitted).regime == report.regime
+    # Density within 2x of the source (structural, not exact).
+    assert fitted.nnz == pytest.approx(src.nnz, rel=1.0)
+
+
+def test_fit_generator_scales_size(no_network):
+    entry = next(e for e in corpus.vendored_entries()
+                 if e.group == "blocked")
+    report = classify(entry.load())
+    big = fit_generator(report, n=1024, seed=3)
+    assert big.n == 1024
+    assert classify(big).regime == "blocked"

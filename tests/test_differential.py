@@ -167,3 +167,21 @@ def test_forced_dispatch_agrees_with_differential_reference():
         out = sparse.spmm(m, b, strategy=strategy)
         np.testing.assert_allclose(np.asarray(out), ref, rtol=RTOL,
                                    atol=ATOL, err_msg=strategy)
+
+
+# --------------------------------------------------------------------- #
+# Real-matrix sweep: every vendored corpus file through every pair.
+# The loaders feed the same COO contract the generators do, so a parsing
+# bug (1-based indices, symmetric mirroring, square padding) shows up
+# here as a numeric divergence, not a silent misload.
+# --------------------------------------------------------------------- #
+
+from repro.data import corpus as _corpus  # noqa: E402
+
+
+@pytest.mark.parametrize(
+    "entry", _corpus.vendored_entries(),
+    ids=lambda e: f"{e.group}__{e.name}")
+@pytest.mark.parametrize("d", [1, 8])
+def test_all_pairs_match_dense_on_vendored_corpus(entry, d):
+    _check_all_pairs(entry.load(), d)

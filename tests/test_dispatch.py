@@ -199,6 +199,90 @@ def test_cache_evicts_on_gc():
 
 
 # --------------------------------------------------------------------- #
+# Learned fallback: the dispatch tree breaks analytic near-ties only.
+# --------------------------------------------------------------------- #
+
+def _constant_tree(label):
+    """A depth-0 tree that always predicts ``label``."""
+    from repro.data.dtree import FEATURES, DecisionTree
+    x = np.array([[0.0] * len(FEATURES), [1.0] * len(FEATURES)])
+    return DecisionTree(max_depth=0, min_leaf=1).fit(x, [label, label])
+
+
+def test_analytic_only_without_tree():
+    disp = sparse.Dispatcher(backend="jax", tree=False)
+    plan = disp.plan(_mats()["random"], 16)
+    assert plan.decision_source == "analytic"
+    assert plan.decision_path == ()
+    assert "decision=analytic" in plan.summary()
+
+
+def test_tree_breaks_near_tie_with_provenance():
+    # A huge margin makes every eligible candidate a near-tie, so the
+    # tree's pick must win and stamp its provenance + path.
+    disp = sparse.Dispatcher(backend="jax", tree=_constant_tree("csr"),
+                             tree_margin=0.99)
+    m = _mats()["random"]
+    plan = disp.plan(m, 16)
+    assert plan.chosen == "csr"
+    assert plan.decision_source == "tree"
+    assert plan.decision_path and plan.decision_path[-1].startswith(
+        "leaf:csr")
+    text = plan.summary()
+    assert "decision=tree" in text and "~ tree:" in text
+    # Numerics are unaffected by who chose the format.
+    b = _b(N, 16)
+    ref = np.asarray(sparse.formats.coo_to_dense(m)) @ np.asarray(b)
+    np.testing.assert_allclose(np.asarray(disp.spmm(m, b)), ref,
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_tree_cannot_overrule_confident_ranking():
+    # DIA is policy-ineligible on random sparsity, and with margin=0 no
+    # gap qualifies: the analytic winner stands in both cases.
+    m = _mats()["random"]
+    analytic = sparse.Dispatcher(backend="jax", tree=False).plan(m, 16)
+    ineligible = sparse.Dispatcher(backend="jax",
+                                   tree=_constant_tree("dia"),
+                                   tree_margin=0.99).plan(m, 16)
+    assert ineligible.chosen == analytic.chosen
+    assert ineligible.decision_source == "analytic"
+    zero_margin = sparse.Dispatcher(backend="jax",
+                                    tree=_constant_tree("csr"),
+                                    tree_margin=0.0).plan(m, 16)
+    assert zero_margin.decision_source == "analytic"
+
+
+def test_tree_ignored_for_forced_strategy():
+    disp = sparse.Dispatcher(backend="jax", tree=_constant_tree("csr"),
+                             tree_margin=0.99)
+    plan = disp.plan(_mats()["random"], 16, strategy="ell")
+    assert plan.chosen == "ell"
+    assert plan.decision_source == "analytic"
+
+
+def test_tree_margin_validated():
+    with pytest.raises(ValueError, match="tree_margin"):
+        sparse.Dispatcher(tree_margin=1.5)
+
+
+def test_persisted_tree_resolved_lazily(tmp_path, monkeypatch):
+    """tree=None loads the store's tree; refits invalidate cached plans
+    through refresh_calibration + the fingerprint in the plan key."""
+    from repro.data.dtree import DispatchTreeStore
+    monkeypatch.setenv("REPRO_CALIBRATION_DIR", str(tmp_path))
+    m = _mats()["random"]
+    disp = sparse.Dispatcher(backend="jax", tree_margin=0.99)
+    before = disp.plan(m, 16)
+    assert before.decision_source == "analytic"   # no tree persisted yet
+    DispatchTreeStore().save(_constant_tree("csr"), "jax")
+    disp.refresh_calibration()
+    after = disp.plan(m, 16)
+    assert after is not before                    # new plan, not cache hit
+    assert after.decision_source == "tree" and after.chosen == "csr"
+
+
+# --------------------------------------------------------------------- #
 # Measured acceptance (slow): auto keeps up with the best fixed format.
 # --------------------------------------------------------------------- #
 

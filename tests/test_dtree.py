@@ -1,0 +1,116 @@
+"""Decision-tree dispatch fallback: CART, serialization, persistence.
+
+The tree is the SpChar-style learned component; these tests pin the
+feature schema (including the inf-alpha cap), the fit/predict/path
+contract, the lossless JSON round-trip the fingerprint-based plan
+caching depends on, and the store's refusal of stale payloads —
+mirroring the CalibrationStore's registry-version staleness gate.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import patterns
+from repro.core.classify import classify
+from repro.data.dtree import (ALPHA_CAP, FEATURES, DecisionTree,
+                              DispatchTreeStore, features_from_report)
+from repro.kernels import registry
+
+
+def _toy_data():
+    """Linearly separable two-class set over the real feature schema."""
+    mats = [patterns.erdos_renyi(256, 8, seed=s) for s in range(4)] + \
+           [patterns.banded(256, 3, seed=s) for s in range(4)]
+    x = np.stack([features_from_report(classify(m), 32) for m in mats])
+    y = ["csr"] * 4 + ["dia"] * 4
+    return x, y
+
+
+def test_features_match_schema():
+    m = patterns.banded(128, 1, seed=0)          # flat degrees: alpha=inf
+    report = classify(m)
+    assert report.stats["alpha_hill"] == float("inf")
+    x = features_from_report(report, 64)
+    assert x.shape == (len(FEATURES),)
+    assert np.all(np.isfinite(x))                # inf capped for splits
+    assert x[FEATURES.index("alpha_hill")] == ALPHA_CAP
+    assert x[FEATURES.index("d")] == 64.0
+    # d is part of the decision: two widths give distinct vectors.
+    assert not np.array_equal(x, features_from_report(report, 128))
+
+
+def test_fit_predict_and_path():
+    x, y = _toy_data()
+    tree = DecisionTree(max_depth=3, min_leaf=1).fit(x, y)
+    for xi, yi in zip(x, y):
+        assert tree.predict(xi) == yi
+        path = tree.decision_path(xi)
+        assert path[-1].startswith(f"leaf:{yi}(")
+        assert all(("<=" in step) or (">" in step) for step in path[:-1])
+
+
+def test_fit_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="non-empty"):
+        DecisionTree().fit(np.zeros((0, len(FEATURES))), [])
+    with pytest.raises(ValueError, match="features"):
+        DecisionTree().fit(np.zeros((2, 3)), ["a", "b"])
+    with pytest.raises(ValueError, match="not fitted"):
+        DecisionTree().predict(np.zeros(len(FEATURES)))
+
+
+def test_json_round_trip_preserves_predictions():
+    x, y = _toy_data()
+    tree = DecisionTree(max_depth=3, min_leaf=1).fit(x, y)
+    clone = DecisionTree.from_json(
+        json.loads(json.dumps(tree.to_json())))
+    for xi in x:
+        assert clone.predict(xi) == tree.predict(xi)
+        assert clone.decision_path(xi) == tree.decision_path(xi)
+    assert clone.fingerprint() == tree.fingerprint()
+    other = DecisionTree(max_depth=1, min_leaf=1).fit(x, y)
+    assert other.fingerprint() != tree.fingerprint()
+
+
+def test_store_round_trip(tmp_path):
+    x, y = _toy_data()
+    tree = DecisionTree(max_depth=2, min_leaf=1).fit(x, y)
+    store = DispatchTreeStore(tmp_path)
+    assert store.load("jax") is None             # absent: analytic-only
+    path = store.save(tree, "jax", meta={"rows": len(y)})
+    assert path.name == "dispatch_tree-jax.json"
+    loaded = store.load("jax")
+    assert loaded is not None
+    assert loaded.fingerprint() == tree.fingerprint()
+    assert store.load("pallas") is None          # per-backend files
+
+
+def test_store_refuses_stale_payloads(tmp_path):
+    x, y = _toy_data()
+    tree = DecisionTree(max_depth=2, min_leaf=1).fit(x, y)
+    store = DispatchTreeStore(tmp_path)
+    store.save(tree, "jax")
+    path = store.path_for("jax")
+
+    payload = json.loads(path.read_text())
+    payload["registry_version"] = registry.REGISTRY_VERSION - 1
+    path.write_text(json.dumps(payload))
+    assert store.load("jax") is None             # predates the registry
+
+    payload = json.loads(path.read_text())
+    payload["registry_version"] = registry.REGISTRY_VERSION
+    payload["tree"]["features"] = ["bogus"]
+    path.write_text(json.dumps(payload))
+    assert store.load("jax") is None             # feature-schema drift
+
+    path.write_text("{not json")
+    assert store.load("jax") is None             # corrupt file, no raise
+
+
+def test_store_honors_calibration_dir_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CALIBRATION_DIR", str(tmp_path))
+    x, y = _toy_data()
+    tree = DecisionTree(max_depth=1, min_leaf=1).fit(x, y)
+    DispatchTreeStore().save(tree, "jax")
+    assert (tmp_path / "dispatch_tree-jax.json").is_file()
+    assert DispatchTreeStore().load("jax") is not None

@@ -3,8 +3,9 @@ import numpy as np
 import pytest
 
 from repro.core import banded, blocked, classify, erdos_renyi, scale_free
-from repro.core.classify import block_stats, degree_gini, hill_alpha
-from repro.core.patterns import paper_suite
+from repro.core.classify import (HILL_MIN_DEGREES, block_stats, degree_gini,
+                                 hill_alpha, hub_dominance)
+from repro.core.patterns import COOMatrix, paper_suite
 
 
 @pytest.mark.parametrize("gen,expected", [
@@ -74,3 +75,78 @@ def test_er_has_no_structure():
     m = erdos_renyi(2 ** 12, 8, seed=13)
     deg = np.bincount(m.rows, minlength=m.n)
     assert degree_gini(deg) < 0.45
+
+
+def test_er_delivers_exact_density():
+    """The draw-then-dedup generator used to lose ~avg_deg/(2n) of its
+    entries to birthday collisions; nnz must now equal the request."""
+    for n, deg, seed in [(1024, 8, 0), (256, 32, 1), (4096, 64, 2)]:
+        m = erdos_renyi(n, deg, seed=seed)
+        assert m.nnz == round(n * deg), (n, deg)
+        assert m.meta["achieved_nnz"] == m.nnz
+        assert m.meta["achieved_avg_degree"] == pytest.approx(deg)
+    # Saturating request caps at the dense matrix, no infinite loop.
+    assert erdos_renyi(16, 16, seed=3).nnz == 256
+
+
+def test_generators_record_achieved_density():
+    m = banded(512, 4, fill=0.7, seed=5)
+    assert m.meta["achieved_nnz"] == m.nnz
+    assert m.meta["achieved_avg_degree"] == pytest.approx(m.nnz / m.n)
+
+
+def test_hill_alpha_small_and_flat_vectors():
+    """inf means *no detectable heavy tail* — by design, not by accident
+    (the old clamp read deg[size-1], degenerating the estimator)."""
+    # Below the documented sample floor: inf, never a spurious estimate.
+    assert hill_alpha(np.full(HILL_MIN_DEGREES - 1, 5)) == float("inf")
+    assert hill_alpha(np.zeros(100, dtype=int)) == float("inf")
+    # Flat degree vectors (uniform/banded) have no tail at any size.
+    assert hill_alpha(np.full(10_000, 7)) == float("inf")
+    # A genuine power law at corpus scale stays finite and in range:
+    # the old clamp's failure mode was inf exactly here.
+    deg = np.bincount(scale_free(256, 8, alpha=2.2, seed=8).rows,
+                      minlength=256)
+    assert 1.5 < hill_alpha(deg) < 3.5
+
+
+def test_hub_dominance_separates_hubs_from_uniform():
+    assert hub_dominance(np.full(1000, 5)) == pytest.approx(1.0)
+    assert hub_dominance(np.zeros(10)) == 0.0
+    sf = np.bincount(scale_free(256, 8, alpha=2.1, seed=8).rows,
+                     minlength=256)
+    er = np.bincount(erdos_renyi(256, 8, seed=1).rows, minlength=256)
+    assert hub_dominance(sf) > 7.0 > hub_dominance(er)
+
+
+def _transpose(m: COOMatrix) -> COOMatrix:
+    lin = m.cols.astype(np.int64) * m.n + m.rows
+    order = np.argsort(lin, kind="stable")
+    return COOMatrix(n=m.n, rows=m.cols[order], cols=m.rows[order],
+                     vals=m.vals[order], pattern=m.pattern, meta={})
+
+
+@pytest.mark.parametrize("n,deg", [(256, 8), (4096, 16)])
+def test_classifier_detects_column_hubs(n, deg):
+    """Transposed scale-free: uniform row degrees, heavy column tail.
+    Row-only degree statistics classified this as ``random``."""
+    mt = _transpose(scale_free(n, deg, alpha=2.2, seed=5))
+    report = classify(mt)
+    assert report.regime == "scale_free", report.stats
+    assert report.stats["tail_axis"] == "col"
+    assert report.stats["col_gini"] > report.stats["row_gini"]
+
+
+def test_classifier_small_matrix_regimes():
+    """Corpus-scale (n of a few hundred) versions of every regime: the
+    sizes the vendored samples live at, where the pre-fix classifier
+    sent banded, blocked, and scale-free matrices all to ``random``."""
+    cases = [
+        (erdos_renyi(256, 8, seed=1), "random"),
+        (banded(224, 5, fill=0.85, seed=5), "diagonal"),
+        (blocked(256, t=32, num_blocks=16, nnz_per_block=256, seed=6),
+         "blocked"),
+        (scale_free(256, 8, alpha=2.1, seed=8), "scale_free"),
+    ]
+    for m, expected in cases:
+        assert classify(m).regime == expected, (m.pattern, m.n)

@@ -1,0 +1,87 @@
+"""Regenerate the vendored corpus sample set (deterministic, offline).
+
+SuiteSparse/DLMC are unavailable offline, so the vendored corpus under
+``src/repro/data/corpus_samples/`` is a deterministic stand-in: small
+matrices in each of the paper's four structure groups, written through
+the real ``.smtx`` / ``.mtx`` serializers so the loaders, the classifier
+golden tests, and the differential harness exercise the exact file
+formats a downloaded corpus would arrive in.  Both formats appear in
+every run so neither loader can rot unnoticed.
+
+Run from the repo root to refresh the files (they are committed):
+
+    PYTHONPATH=src python tools/make_corpus_samples.py
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+
+def samples():
+    """The vendored set: (filename, COOMatrix) in all four groups."""
+    from repro.core import patterns
+    from repro.data import corpus
+
+    def transpose(m):
+        # Column-hub regression fixture (the classify() row-degree bug):
+        # re-sorted row-major through the loader finalizer.
+        return corpus._finalize_loaded(
+            m.n, m.cols.astype(np.int64), m.rows.astype(np.int64),
+            m.vals, m.pattern, dict(m.meta))
+
+    return [
+        ("random__er_256_8.smtx",
+         patterns.erdos_renyi(256, 8, seed=1)),
+        ("random__er_192_12.mtx",
+         patterns.erdos_renyi(192, 12, seed=2)),
+        ("diagonal__tridiag_256.smtx",
+         patterns.banded(256, 2, fill=1.0, seed=4)),
+        ("diagonal__band_224_5.mtx",
+         patterns.banded(224, 5, fill=0.85, seed=5)),
+        ("blocked__fem_256_t32.smtx",
+         patterns.blocked(256, t=32, num_blocks=16, nnz_per_block=256,
+                          seed=6)),
+        ("blocked__mesh_256_t32.mtx",
+         patterns.blocked(256, t=32, num_blocks=24, nnz_per_block=40,
+                          seed=6)),
+        ("scale_free__hub_256_21.smtx",
+         patterns.scale_free(256, 8, alpha=2.1, seed=8)),
+        # The transpose of a hub graph: uniform row degrees, heavy
+        # column tail — the matrix that exposed the row-only classifier.
+        ("scale_free__colhub_192.mtx",
+         transpose(patterns.scale_free(192, 6, alpha=2.3, seed=9))),
+    ]
+
+
+def main() -> int:
+    """Write the sample files and verify each classifies into its group."""
+    from repro.core.classify import classify
+    from repro.data import corpus
+
+    corpus.SAMPLES_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for filename, m in samples():
+        group = filename.split("__", 1)[0]
+        path = corpus.SAMPLES_DIR / filename
+        if path.suffix == ".smtx":
+            corpus.write_smtx(m, path)
+        else:
+            corpus.write_mtx(m, path)
+        loaded = corpus.load_matrix(path)
+        regime = classify(loaded).regime
+        status = "ok" if regime == group else "MISCLASSIFIED"
+        if regime != group:
+            failures.append((filename, regime))
+        print(f"{filename:32s} n={loaded.n:4d} nnz={loaded.nnz:6d} "
+              f"-> {regime:10s} [{status}]")
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        return 1
+    print(f"wrote {len(samples())} samples to {corpus.SAMPLES_DIR}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
