@@ -30,7 +30,9 @@ Prints ``name,us_per_call,derived`` CSV rows plus the full SpMM CSV to
 benchmarks/out/.  ``--smoke`` runs the SpMM + streamed-serving suites at
 tiny scale with few repeats — the CI per-PR dispatch-policy and
 plan-once-beats-percall regression checks; the produced CSV (including
-the streamed rows) is uploaded as a workflow artifact.
+the streamed rows) is uploaded as a workflow artifact.  ``--smoke-bf16``
+re-runs the tiny suite at reduced storage precision (bf16 values) and
+soft-reports the bf16-vs-fp32 comparison — the CI nightly bf16 lane.
 """
 from __future__ import annotations
 
@@ -106,6 +108,38 @@ def bench_spmm(beta: float, *, scale: int = 16, d_values=None,
         _emit(f"fig2.claim.{k}", 0.0, "PASS" if v else "FAIL")
     if dispatch_claims_only and failed:
         raise SystemExit(f"dispatch claims failed: {failed}")
+
+
+def bench_spmm_bf16(beta: float, *, scale: int = 11, d_values=(16, 64),
+                    repeats: int = 3,
+                    csv_name: str = "smoke_spmm_bf16.csv") -> None:
+    """bf16 smoke lane: the tiny suite re-run at reduced storage precision.
+
+    CPU CI emulates bf16 (XLA upcasts to fp32 on host), so measured
+    GFLOP/s carry no claim weight here; the lane exercises the
+    reduced-precision dispatch path end-to-end nightly and gives the
+    bf16-keyed cells their own trend baseline (``tools/perf_trend.py``
+    keys cells on the dtype column, so these rows never diff against
+    fp32 ones).  The bf16-keeps-up-with-fp32 comparison is soft-reported
+    over the combined fp32 + bf16 results, mirroring the scale-free
+    ordering soft report.  The jax backend carries bf16 with int32
+    indices (XLA gathers), so the lane pins ``precision="bf16i32"``.
+    """
+    from benchmarks.spmm_suite import (
+        precision_claims_check, run_suite, to_csv)
+    base = run_suite(beta, scale=scale, d_values=d_values, repeats=repeats)
+    reduced = run_suite(beta, scale=scale, d_values=d_values,
+                        repeats=repeats, precision="bf16i32")
+    os.makedirs("benchmarks/out", exist_ok=True)
+    with open(os.path.join("benchmarks/out", csv_name), "w") as f:
+        f.write(to_csv(reduced))
+    for r in reduced:
+        if r.d == max(d_values):
+            _emit(f"bf16.{r.matrix}.{r.impl}.d{r.d}",
+                  2.0 * r.nnz * r.d / max(r.gflops, 1e-9) / 1e3,
+                  f"{r.gflops:.2f}GF/s;dtype={r.dtype};chosen={r.chosen}")
+    for k, v in precision_claims_check(base + reduced).items():
+        _emit(f"fig2.claim.{k}", 0.0, "PASS" if v else "FAIL")
 
 
 def bench_stream_suite(beta: float, *, scale: int, d_values, reuses,
@@ -199,27 +233,28 @@ def bench_kernels() -> None:
     from repro import kernels, sparse
     from repro.core import blocked as gen_blocked
     from repro.core import erdos_renyi
+    from repro.kernels import registry
     m = gen_blocked(512, t=32, num_blocks=120, nnz_per_block=60, seed=0)
-    a = sparse.coo_to_bcsr(m, 32)
     b = jnp.asarray(np.random.default_rng(0).normal(
         size=(512, 64)).astype(np.float32))
-    out = kernels.bcsr_spmm(a, b, block_d=64)
-    jax.block_until_ready(out)
+    # Registry path (the ops.py wrappers are deprecated): bind prepares
+    # the layout once, then timing measures the kernel replay alone.
+    ctx = registry.KernelContext(bcsr_block=32, row_tile=8, chunk=128)
+    run_bcsr = registry.get("bcsr", "pallas").bind(m, ctx)
+    jax.block_until_ready(run_bcsr(b))
     t0 = time.perf_counter()
-    jax.block_until_ready(kernels.bcsr_spmm(a, b, block_d=64))
+    jax.block_until_ready(run_bcsr(b))
     us = (time.perf_counter() - t0) * 1e6
-    roof = kernels.bcsr_kernel_roofline(a, 64)
+    roof = kernels.bcsr_kernel_roofline(sparse.coo_to_bcsr(m, 32), 64)
     _emit("kernels.bcsr_spmm.interp", us,
           f"ai={roof.ai:.2f};mxu_util={roof.mxu_utilization:.2f}")
     mc = erdos_renyi(512, 8, seed=1)
-    csr = sparse.coo_to_csr(mc)
-    out = kernels.csr_spmm(csr, b, row_tile=8, chunk=128, block_d=64)
-    jax.block_until_ready(out)
+    run_csr = registry.get("csr", "pallas").bind(mc, ctx)
+    jax.block_until_ready(run_csr(b))
     t0 = time.perf_counter()
-    jax.block_until_ready(kernels.csr_spmm(csr, b, row_tile=8, chunk=128,
-                                           block_d=64))
+    jax.block_until_ready(run_csr(b))
     us = (time.perf_counter() - t0) * 1e6
-    roof = kernels.csr_kernel_roofline(csr, 64)
+    roof = kernels.csr_kernel_roofline(sparse.coo_to_csr(mc), 64)
     _emit("kernels.csr_spmm.interp", us,
           f"ai={roof.ai:.2f};mxu_util={roof.mxu_utilization:.2f}")
     g = kernels.grouped_matmul_roofline(4096, 4096, 1536, 128)
@@ -251,6 +286,11 @@ def main() -> None:
                              "smoke job); writes benchmarks/out/"
                              "engine_smoke.csv and enforces the "
                              "coalescing-beats-sync goodput claim")
+    parser.add_argument("--smoke-bf16", action="store_true",
+                        help="tiny-scale suite at reduced storage "
+                             "precision (CI nightly bf16 lane); writes "
+                             "benchmarks/out/smoke_spmm_bf16.csv and "
+                             "soft-reports the bf16-vs-fp32 comparison")
     parser.add_argument("--calibrate", action="store_true",
                         help="fit + persist on-host per-format compute "
                              "ceilings before (or instead of) the suites; "
@@ -262,6 +302,9 @@ def main() -> None:
         bench_calibrate(beta)
         if not args.smoke:
             return
+    if args.smoke_bf16:
+        bench_spmm_bf16(beta)
+        return
     if args.engine_smoke:
         bench_engine_suite(beta, scale=10, d=8, streams=4, per_stream=8,
                            repeats=3, csv_name="engine_smoke.csv",

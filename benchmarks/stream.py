@@ -80,6 +80,7 @@ class StreamCell:
     ai_model: float           # chosen candidate's sparsity-aware AI
     predicted_gflops: float   # amortized prediction at this reuse horizon
     chosen: str               # format this mode actually executed
+    dtype: str = "f32i32"     # storage-precision token the mode ran at
 
 
 def stream_matrices(scale: int) -> Dict[str, object]:
@@ -172,11 +173,13 @@ def run_stream_suite(beta: float, *, scale: int = 11,
                 audit = plan_obj.dispatch.candidate(plan_obj.chosen)
                 single_audit = single.candidate(single.chosen)
                 cached_audit = cached_plan.candidate(cached_plan.chosen)
-                for mode, fn, chosen, aud in (
-                        ("stream", run_stream, plan_obj.chosen, audit),
-                        ("percall", run_percall, single.chosen, single_audit),
+                for mode, fn, chosen, aud, tok in (
+                        ("stream", run_stream, plan_obj.chosen, audit,
+                         plan_obj.precision),
+                        ("percall", run_percall, single.chosen, single_audit,
+                         single.precision),
                         ("percall_cached", run_cached, cached_plan.chosen,
-                         cached_audit)):
+                         cached_audit, cached_plan.precision)):
                     total = _best_of(fn, repeats)
                     results.append(StreamCell(
                         matrix=name, pattern=m.pattern, mode=mode, d=d,
@@ -184,7 +187,7 @@ def run_stream_suite(beta: float, *, scale: int = 11,
                         gflops=flops / total / 1e9,
                         ai_model=aud.ai or 0.0,
                         predicted_gflops=aud.amortized_gflops or 0.0,
-                        chosen=chosen))
+                        chosen=chosen, dtype=tok))
     return results
 
 
@@ -227,7 +230,8 @@ def to_csv_rows(cells: List[StreamCell]) -> List[str]:
         frac = c.gflops / c.predicted_gflops if c.predicted_gflops else 0.0
         rows.append(f"{c.matrix},{c.pattern},{c.mode}_r{c.reuse},{c.d},"
                     f"{c.nnz},{c.gflops:.4f},{c.ai_model:.5f},"
-                    f"{c.predicted_gflops:.4f},{frac:.4f},{c.chosen}")
+                    f"{c.predicted_gflops:.4f},{frac:.4f},{c.chosen},"
+                    f"{c.dtype}")
     return rows
 
 
@@ -251,6 +255,7 @@ class ShardCell:
     predicted_gflops: float   # cost-model prediction for this tier
     chosen: str               # format the plan executes
     speedup: float            # gflops / the single-device cell's gflops
+    dtype: str = "f32i32"     # storage-precision token the tier ran at
 
 
 def run_shard_suite(beta: float, *, scale: int = 10,
@@ -308,7 +313,8 @@ def run_shard_suite(beta: float, *, scale: int = 10,
                     if impl != "single" else 1,
                     steady_s=t, gflops=gf, ai_model=ai,
                     predicted_gflops=pred, chosen=p.chosen,
-                    speedup=gf / base if base else 0.0))
+                    speedup=gf / base if base else 0.0,
+                    dtype=p.precision))
     return results
 
 
@@ -341,7 +347,8 @@ def shard_csv_rows(cells: List[ShardCell]) -> List[str]:
     for c in cells:
         rows.append(f"{c.matrix},{c.pattern},{c.impl},{c.d},"
                     f"{c.nnz},{c.gflops:.4f},{c.ai_model:.5f},"
-                    f"{c.predicted_gflops:.4f},{c.speedup:.4f},{c.chosen}")
+                    f"{c.predicted_gflops:.4f},{c.speedup:.4f},{c.chosen},"
+                    f"{c.dtype}")
     return rows
 
 
@@ -369,13 +376,14 @@ class EngineCell:
     p50_us: float             # median per-request latency
     p99_us: float
     goodput_rps: float        # requests per second over the serving span
+    dtype: str = "f32i32"     # storage-precision token the plan served at
 
 
 #: Header for the engine lane's own CSV (latency columns don't fit the
 #: GFLOP/s-shaped ``spmm_suite.CSV_HEADER``; ``tools/perf_trend.py``
 #: trends this file with ``--metric goodput_rps``).
 ENGINE_CSV_HEADER = ("matrix,pattern,impl,d,nnz,streams,requests,"
-                     "batches,p50_us,p99_us,goodput_rps")
+                     "batches,p50_us,p99_us,goodput_rps,dtype")
 
 
 def run_engine_suite(beta: float, *, scale: int = 10, d: int = 8,
@@ -444,7 +452,7 @@ def run_engine_suite(beta: float, *, scale: int = 10, d: int = 8,
             streams=streams, requests=total,
             batches=best_engine["batches"],
             p50_us=best_engine["p50_us"], p99_us=best_engine["p99_us"],
-            goodput_rps=best_engine["goodput_rps"]))
+            goodput_rps=best_engine["goodput_rps"], dtype=plan.precision))
 
         best_sync = None
         for _ in range(repeats):
@@ -464,7 +472,7 @@ def run_engine_suite(beta: float, *, scale: int = 10, d: int = 8,
             streams=streams, requests=total, batches=total,
             p50_us=float(np.percentile(sync_us, 50)),
             p99_us=float(np.percentile(sync_us, 99)),
-            goodput_rps=best_sync[0]))
+            goodput_rps=best_sync[0], dtype=plan.precision))
     return results
 
 
@@ -497,7 +505,7 @@ def engine_csv_rows(cells: List[EngineCell]) -> List[str]:
     """Render engine cells under :data:`ENGINE_CSV_HEADER` (no header)."""
     return [f"{c.matrix},{c.pattern},{c.impl},{c.d},{c.nnz},{c.streams},"
             f"{c.requests},{c.batches},{c.p50_us:.1f},{c.p99_us:.1f},"
-            f"{c.goodput_rps:.2f}"
+            f"{c.goodput_rps:.2f},{c.dtype}"
             for c in cells]
 
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kernels
-from repro.kernels import ref
+from repro.kernels import ref, registry
 
 E, K_DIM, N_DIM, TOKENS, TOPK, BM = 8, 64, 128, 1024, 2, 128
 
@@ -39,7 +39,8 @@ for e in range(E):
 xb = jnp.asarray(np.concatenate(blocks))
 gid = jnp.asarray(np.asarray(gids, np.int32))
 
-out = kernels.grouped_matmul(xb, w, gid, bm=BM, bk=64, bn=128)
+spec = registry.get("grouped", "pallas")
+out = spec.bind((w, gid, BM, 64, 128), registry.KernelContext())(xb)
 expect = ref.grouped_matmul_ref(xb, w, gid, bm=BM)
 np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                            rtol=2e-3, atol=2e-3)

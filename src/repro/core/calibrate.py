@@ -82,7 +82,7 @@ def fit_ceiling(d_values: Sequence[int],
 
 @dataclasses.dataclass(frozen=True)
 class FormatCalibration:
-    """Fitted ceiling for one (format, backend) on one host."""
+    """Fitted ceiling for one (format, backend, precision) on one host."""
 
     format: str
     backend: str
@@ -91,6 +91,9 @@ class FormatCalibration:
     sustained_gflops: float           # fitted asymptote, useful GFLOP/s
     useful_fraction: float            # of the calibration matrix
     measured: Dict[int, float]        # d -> measured useful GFLOP/s
+    #: Storage precision token the sweep ran at ("f32i32" default keeps
+    #: files saved before the precision axis loading cleanly).
+    precision: str = "f32i32"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,9 +109,22 @@ class Calibration:
     #: calibrations predating the active kernel set.
     registry_version: int = 0
 
-    def efficiency(self) -> Dict[str, Tuple[float, float]]:
-        """The ``format -> (peak_fraction, d_half)`` ceiling table."""
-        return {e.format: (e.peak_fraction, e.d_half) for e in self.entries}
+    def efficiency(self, precision: str = "f32i32"
+                   ) -> Dict[str, Tuple[float, float]]:
+        """The ``format -> (peak_fraction, d_half)`` ceiling table.
+
+        ``precision`` selects dtype-specific fits: a format's entry for
+        the requested token wins; formats calibrated only at fp32 fall
+        back to that fit (operand rounding barely moves the *compute*
+        ceiling — what a reduced precision changes is the bandwidth
+        roofline, which the dispatcher sizes separately).
+        """
+        out = {e.format: (e.peak_fraction, e.d_half)
+               for e in self.entries if e.precision == "f32i32"}
+        if precision != "f32i32":
+            out.update({e.format: (e.peak_fraction, e.d_half)
+                        for e in self.entries if e.precision == precision})
+        return out
 
     def summary(self) -> str:
         """Render the fitted ceilings as a human-readable table."""
@@ -116,7 +132,8 @@ class Calibration:
                  f"backend={self.backend})"]
         for e in self.entries:
             lines.append(
-                f"  {e.format:4s} peak_fraction={e.peak_fraction:.4f} "
+                f"  {e.format:8s} {e.precision:7s} "
+                f"peak_fraction={e.peak_fraction:.4f} "
                 f"d_half={e.d_half:6.1f}  "
                 f"(sustained {e.sustained_gflops:.2f} GF/s useful, "
                 f"useful_fraction {e.useful_fraction:.3f})")
@@ -193,7 +210,8 @@ class CalibrationStore:
                 sustained_gflops=float(e["sustained_gflops"]),
                 useful_fraction=float(e["useful_fraction"]),
                 measured={int(k): float(v)
-                          for k, v in e["measured"].items()})
+                          for k, v in e["measured"].items()},
+                precision=e.get("precision", "f32i32"))
             for e in payload.get("entries", ()))
         return Calibration(hardware=payload["hardware"],
                            fingerprint=payload["fingerprint"],
@@ -278,6 +296,7 @@ def calibrate(hw: HardwareSpec, *, backend: str = "jax",
               formats: Optional[Sequence[str]] = None,
               d_values: Sequence[int] = DEFAULT_D_VALUES,
               scale: int = 9, repeats: int = 3, bcsr_block: int = 32,
+              precisions: Sequence[str] = ("f32i32",),
               store: Optional[CalibrationStore] = None) -> Calibration:
     """Measure and fit the per-format compute ceilings on this host.
 
@@ -299,6 +318,10 @@ def calibrate(hw: HardwareSpec, *, backend: str = "jax",
         scale: matrix dimension exponent (n = 2**scale).
         repeats: min-of-N timing repeats per cell.
         bcsr_block: BCSR block edge for the blocked calibration matrix.
+        precisions: precision tokens to fit per format (each a separate
+            :class:`FormatCalibration` entry); combos a kernel spec does
+            not support, or that this matrix cannot legally pack (int16
+            extent), are skipped.  Default fits fp32 only.
         store: when given, ``store.save`` the result before returning.
 
     Returns:
@@ -321,29 +344,40 @@ def calibrate(hw: HardwareSpec, *, backend: str = "jax",
                              bcsr_block=bcsr_block, calibration=False)
     entries = []
     for fmt in formats:
-        m = gens[fmt]()
-        rng = np.random.default_rng(7)
-        measured: Dict[int, float] = {}
-        useful_fraction = 1.0
-        for d in d_values:
-            import jax.numpy as jnp
-            b = jnp.asarray(
-                rng.normal(size=(m.n, d)).astype(np.float32))
-            plan = disp.plan(m, d, strategy=fmt)
-            useful_fraction = plan.candidate(fmt).useful_fraction
-            run = disp.executor(m, plan)
-            dt = _best_of(lambda run=run, b=b: run(b), repeats)
-            measured[int(d)] = 2.0 * m.nnz * d / dt / 1e9
-        g_inf, d_half = fit_ceiling(list(measured), list(measured.values()))
-        lo, hi = PEAK_FRACTION_RANGE
-        peak_fraction = float(np.clip(
-            g_inf * 1e9 / (hw.peak_flops * max(useful_fraction, 1e-9)),
-            lo, hi))
-        d_half = float(np.clip(d_half, *D_HALF_RANGE))
-        entries.append(FormatCalibration(
-            format=fmt, backend=backend, peak_fraction=peak_fraction,
-            d_half=d_half, sustained_gflops=g_inf,
-            useful_fraction=useful_fraction, measured=measured))
+        spec = registry.get(fmt, backend)
+        for prec in precisions:
+            if prec not in spec.supported_precisions:
+                continue
+            m = gens[fmt]()
+            rng = np.random.default_rng(7)
+            measured: Dict[int, float] = {}
+            useful_fraction = 1.0
+            try:
+                for d in d_values:
+                    import jax.numpy as jnp
+                    b = jnp.asarray(
+                        rng.normal(size=(m.n, d)).astype(np.float32))
+                    plan = disp.plan(m, d, strategy=fmt, precision=prec)
+                    useful_fraction = plan.candidate(fmt).useful_fraction
+                    run = disp.executor(m, plan)
+                    dt = _best_of(lambda run=run, b=b: run(b), repeats)
+                    measured[int(d)] = 2.0 * m.nnz * d / dt / 1e9
+            except ValueError:
+                # e.g. int16 extent illegal for this matrix: skip the
+                # combo, the fp32 fit still answers for the format.
+                continue
+            g_inf, d_half = fit_ceiling(list(measured),
+                                        list(measured.values()))
+            lo, hi = PEAK_FRACTION_RANGE
+            peak_fraction = float(np.clip(
+                g_inf * 1e9 / (hw.peak_flops * max(useful_fraction, 1e-9)),
+                lo, hi))
+            d_half = float(np.clip(d_half, *D_HALF_RANGE))
+            entries.append(FormatCalibration(
+                format=fmt, backend=backend, peak_fraction=peak_fraction,
+                d_half=d_half, sustained_gflops=g_inf,
+                useful_fraction=useful_fraction, measured=measured,
+                precision=prec))
     cal = Calibration(hardware=hw.name, fingerprint=hw.fingerprint(),
                       backend=backend, entries=tuple(entries),
                       registry_version=registry.REGISTRY_VERSION)

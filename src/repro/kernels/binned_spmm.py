@@ -46,12 +46,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.csr_spmm import _csr_kernel
+from repro.kernels.csr_spmm import _csr_kernel, index_extent_check
 
 
 def csr_to_slab_bins(indptr: np.ndarray, indices: np.ndarray,
                      data: np.ndarray, *, n: int, row_tile: int = 8,
-                     chunk: int = 128, b_tile: Optional[int] = None
+                     chunk: int = 128, b_tile: Optional[int] = None,
+                     index_dtype=np.int32
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                 np.ndarray, np.ndarray, np.ndarray]:
     """Bin CSR nonzeros by B row slab (phase one of the binned kernel).
@@ -69,10 +70,15 @@ def csr_to_slab_bins(indptr: np.ndarray, indices: np.ndarray,
     rows (the layout degenerates to one visit per nonempty row tile).
     An empty matrix still produces one all-zero visit so the kernel has
     a well-formed grid.
+
+    ``cols``/``row_slots`` are stored at ``index_dtype``: slab-local
+    columns address at most ``b_tile`` rows, so int16 is legal whenever
+    the slab height fits (the kernel upcasts after the VMEM load).
     """
     indptr = np.asarray(indptr)
     indices = np.asarray(indices).astype(np.int64)
     data = np.asarray(data)
+    index_extent_check(n if b_tile is None else b_tile, index_dtype)
     nnz = int(indptr[-1])
     rows = np.repeat(np.arange(n, dtype=np.int64),
                      np.diff(indptr).astype(np.int64))
@@ -94,8 +100,8 @@ def csr_to_slab_bins(indptr: np.ndarray, indices: np.ndarray,
              seg_slots: np.ndarray, seg_vals: np.ndarray) -> None:
         cnt = seg_cols.shape[0]
         n_chunks = max(1, -(-cnt // chunk))
-        c = np.zeros(n_chunks * chunk, dtype=np.int32)
-        s = np.zeros(n_chunks * chunk, dtype=np.int32)
+        c = np.zeros(n_chunks * chunk, dtype=index_dtype)
+        s = np.zeros(n_chunks * chunk, dtype=index_dtype)
         v = np.zeros(n_chunks * chunk, dtype=data.dtype)
         c[:cnt] = seg_cols
         s[:cnt] = seg_slots
@@ -121,8 +127,8 @@ def csr_to_slab_bins(indptr: np.ndarray, indices: np.ndarray,
             tile = int(seg_tiles[0])
             slab = int(seg_slabs[0])
             emit(tile, slab,
-                 (seg_cols - slab * bt).astype(np.int32),
-                 (seg_rows - tile * row_tile).astype(np.int32), seg_vals)
+                 (seg_cols - slab * bt).astype(index_dtype),
+                 (seg_rows - tile * row_tile).astype(index_dtype), seg_vals)
     return (np.asarray(visit_tiles, dtype=np.int32),
             np.asarray(chunk_visits, dtype=np.int32),
             np.asarray(chunk_slabs, dtype=np.int32),
@@ -211,7 +217,8 @@ def binned_spmm_pallas(visit_tiles: jnp.ndarray, chunk_visits: jnp.ndarray,
 
 
 def pack_rowsplit_chunks(indptr: np.ndarray, indices: np.ndarray,
-                         data: np.ndarray, *, n: int, chunk: int = 128
+                         data: np.ndarray, *, n: int, chunk: int = 128,
+                         index_dtype=np.int32
                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                     np.ndarray]:
     """Cut the row-major nonzero stream into equal-``chunk`` work units.
@@ -226,16 +233,22 @@ def pack_rowsplit_chunks(indptr: np.ndarray, indices: np.ndarray,
 
     Unlike the CSR packing there is no per-(tile, slab) padding: total
     padding is under one chunk regardless of degree skew.
+
+    ``cols``/``row_slots`` are stored at ``index_dtype``.  Row-split
+    columns are *global* (the kernel holds all of B resident), so int16
+    is only legal when ``n`` itself fits — checked here; ``row_map``
+    stays int32 (it is epilogue metadata, not per-nonzero traffic).
     """
     indptr = np.asarray(indptr)
     indices = np.asarray(indices)
     data = np.asarray(data)
+    index_extent_check(n, index_dtype)
     nnz = int(indptr[-1])
     rows = np.repeat(np.arange(n, dtype=np.int64),
                      np.diff(indptr).astype(np.int64))
     num_chunks = max(1, -(-nnz // chunk))
     padded = num_chunks * chunk
-    cols_p = np.zeros(padded, dtype=np.int32)
+    cols_p = np.zeros(padded, dtype=index_dtype)
     vals_p = np.zeros(padded, dtype=data.dtype)
     cols_p[:nnz] = indices[:nnz]
     vals_p[:nnz] = data[:nnz]
@@ -247,7 +260,7 @@ def pack_rowsplit_chunks(indptr: np.ndarray, indices: np.ndarray,
     ranks_p[nnz:] = ranks_p[nnz - 1] if nnz else 0
     ranks_c = ranks_p.reshape(num_chunks, chunk)
     rank_lo = ranks_c[:, 0]
-    slots = (ranks_c - rank_lo[:, None]).astype(np.int32)
+    slots = (ranks_c - rank_lo[:, None]).astype(index_dtype)
     span = int((slots.max() + 1)) if nnz else 1
     window = max(8, -(-span // 8) * 8)
     # Global row per (chunk, window slot); sentinel n past the last rank.
@@ -265,8 +278,10 @@ def pack_rowsplit_chunks(indptr: np.ndarray, indices: np.ndarray,
 def _rowsplit_kernel(cols_ref, slots_ref, vals_ref, b_ref, o_ref, *,
                      window: int):
     """One grid step: reduce one equal-nnz chunk into its row window."""
-    cols = cols_ref[0]                               # [chunk]
-    slots = slots_ref[0]                             # [chunk]
+    # int16-packed indices pay HBM/VMEM traffic at the compact width; the
+    # gather wants int32, so upcast after the load.
+    cols = cols_ref[0].astype(jnp.int32)             # [chunk]
+    slots = slots_ref[0].astype(jnp.int32)           # [chunk]
     vals = vals_ref[0]                               # [chunk]
     gathered = b_ref[...][cols]                      # [chunk, bd]
     scaled = gathered * vals[:, None]

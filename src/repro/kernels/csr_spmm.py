@@ -43,10 +43,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def index_extent_check(extent: int, index_dtype) -> None:
+    """Refuse an index dtype that cannot address ``extent`` positions.
+
+    The packers reserve sentinel values equal to the extent itself, so
+    the extent — not ``extent - 1`` — must be representable (an extent of
+    exactly ``2**15`` is illegal for int16).
+    """
+    if np.dtype(index_dtype) == np.int16 and extent > 2 ** 15 - 1:
+        raise ValueError(
+            f"int16 indices cannot address extent {extent} "
+            f"(max {2 ** 15 - 1} including the sentinel slot)")
+
+
 def csr_to_row_tiles(indptr: np.ndarray, indices: np.ndarray,
                      data: np.ndarray, *, n: int, row_tile: int = 8,
                      chunk: int = 128,
-                     b_tile: Optional[int] = None
+                     b_tile: Optional[int] = None,
+                     index_dtype=np.int32
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                 np.ndarray, np.ndarray]:
     """Pack CSR arrays into fixed-size chunks grouped by row tile.
@@ -63,10 +77,16 @@ def csr_to_row_tiles(indptr: np.ndarray, indices: np.ndarray,
     ``col // bt`` (ascending slab order) and ``cols`` become slab-local
     (``col - slab * bt``), so the kernel only needs one ``[bt, bd]`` slab
     of B resident per chunk.
+
+    ``cols``/``row_slots`` are stored at ``index_dtype``: with slab
+    streaming the addressed extent is only ``b_tile`` rows, so int16
+    columns are legal whenever the slab height fits (the kernel upcasts
+    after the VMEM load — traffic is paid at the compact width).
     """
     indptr = np.asarray(indptr)
     indices = np.asarray(indices)
     data = np.asarray(data)
+    index_extent_check(n if b_tile is None else b_tile, index_dtype)
     num_tiles = (n + row_tile - 1) // row_tile
     tile_ids, slab_ids, cols_c, slots_c, vals_c = [], [], [], [], []
 
@@ -74,8 +94,8 @@ def csr_to_row_tiles(indptr: np.ndarray, indices: np.ndarray,
              vals: np.ndarray) -> None:
         cnt = cols.shape[0]
         n_chunks = max(1, -(-cnt // chunk))
-        c = np.zeros(n_chunks * chunk, dtype=np.int32)
-        s = np.zeros(n_chunks * chunk, dtype=np.int32)
+        c = np.zeros(n_chunks * chunk, dtype=index_dtype)
+        s = np.zeros(n_chunks * chunk, dtype=index_dtype)
         v = np.zeros(n_chunks * chunk, dtype=data.dtype)
         c[:cnt] = cols
         s[:cnt] = slots
@@ -94,13 +114,13 @@ def csr_to_row_tiles(indptr: np.ndarray, indices: np.ndarray,
         vals = data[lo:hi]
         row_of_nz = np.repeat(np.arange(r0, r1),
                               np.diff(indptr[r0:r1 + 1]).astype(np.int64))
-        slots = (row_of_nz - r0).astype(np.int32)
+        slots = (row_of_nz - r0).astype(index_dtype)
         if b_tile is None:
-            emit(tile, 0, cols.astype(np.int32), slots, vals)
+            emit(tile, 0, cols.astype(index_dtype), slots, vals)
             continue
         slabs = cols // b_tile
         if cols.shape[0] == 0:
-            emit(tile, 0, cols.astype(np.int32), slots, vals)
+            emit(tile, 0, cols.astype(index_dtype), slots, vals)
             continue
         # Stable partition by slab: chunks of a tile stay contiguous and
         # visit slabs in ascending order (sequential-ish B traffic).
@@ -112,7 +132,7 @@ def csr_to_row_tiles(indptr: np.ndarray, indices: np.ndarray,
                 np.split(cols, bounds), np.split(slots, bounds),
                 np.split(vals, bounds), np.split(slabs, bounds)):
             slab = int(seg_slabs[0])
-            emit(tile, slab, (seg_cols - slab * b_tile).astype(np.int32),
+            emit(tile, slab, (seg_cols - slab * b_tile).astype(index_dtype),
                  seg_slots, seg_vals)
     return (np.asarray(tile_ids, dtype=np.int32),
             np.asarray(slab_ids, dtype=np.int32),
@@ -132,8 +152,10 @@ def _csr_kernel(tiles_ref, slabs_ref, cols_ref, slots_ref, vals_ref, b_ref,
     def _zero():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    cols = cols_ref[0]                               # [chunk] slab-local
-    slots = slots_ref[0]                             # [chunk]
+    # Indices may be stored int16 (compact-index precisions); the HBM/VMEM
+    # traffic is paid at that width and the gather wants int32.
+    cols = cols_ref[0].astype(jnp.int32)             # [chunk] slab-local
+    slots = slots_ref[0].astype(jnp.int32)           # [chunk]
     vals = vals_ref[0]                               # [chunk]
     gathered = b_ref[...][cols]                      # [chunk, bd] row gather
     scaled = gathered * vals[:, None]
@@ -159,8 +181,10 @@ def csr_spmm_pallas(tile_ids: jnp.ndarray, b_tile_ids: jnp.ndarray,
       tile_ids:   [C] int32 row-tile id per chunk (non-decreasing).
       b_tile_ids: [C] int32 B row-slab id per chunk (all zeros when the
                   layout was packed with ``b_tile=None``).
-      cols:       [C, chunk] int32 column ids, slab-local, zero-padded.
-      row_slots:  [C, chunk] int32 row index within the tile, zero-padded.
+      cols:       [C, chunk] column ids (int32 or int16), slab-local,
+                  zero-padded.
+      row_slots:  [C, chunk] row index within the tile (int32 or int16),
+                  zero-padded.
       vals:       [C, chunk] values, zero-padded.
       b:          [n, d] dense operand.
       n:          matrix dimension (static).

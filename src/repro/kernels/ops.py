@@ -7,9 +7,17 @@ sweep, and the benchmark suite.  This module keeps the original
 container-level call signatures (``csr_spmm(CSRMatrix, b)`` etc.) for
 direct kernel use and the kernel test sweeps; layout helpers and the
 roofline-estimate types live in the registry and are re-exported here.
+
+The wrappers are deprecated: they run fp32/int32 only and do not grow
+the precision axis (value/index dtype selection lives in
+:class:`~repro.kernels.registry.KernelContext`).  New callers should use
+``registry.spmm(m, b, format=..., backend=...)`` or bind a
+:class:`~repro.kernels.registry.KernelSpec`; each wrapper raises a
+``DeprecationWarning`` on call.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -36,6 +44,17 @@ def _interpret(flag: Optional[bool]) -> bool:
     return (jax.default_backend() != "tpu") if flag is None else flag
 
 
+def _warn_deprecated(name: str) -> None:
+    # stacklevel=3: helper frame (1), wrapper frame (2), caller (3).
+    warnings.warn(
+        f"repro.kernels.{name} is a deprecated fp32/int32-only compat "
+        f"wrapper; use repro.kernels.registry.spmm(m, b, format=..., "
+        f"backend='pallas') with a KernelContext (which also carries the "
+        f"value/index precision axis), or the dispatcher in "
+        f"repro.sparse",
+        DeprecationWarning, stacklevel=3)
+
+
 def bcsr_spmm(a: BCSRMatrix, b: jnp.ndarray, *, block_d: int = 512,
               interpret: Optional[bool] = None) -> jnp.ndarray:
     """BCSR SpMM via the Pallas kernel (paper's CSB on TPU).
@@ -51,6 +70,7 @@ def bcsr_spmm(a: BCSRMatrix, b: jnp.ndarray, *, block_d: int = 512,
     Returns:
         ``C = A @ B`` as a dense [n, d] array.
     """
+    _warn_deprecated("bcsr_spmm")
     a = pad_empty_block_rows(a)
     return bcsr_spmm_pallas(a.blocks, a.block_rows, a.block_cols, b,
                             n=a.n, t=a.t, block_d=block_d,
@@ -82,6 +102,7 @@ def csr_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
     Returns:
         ``C = A @ B`` as a dense [n, d] array.
     """
+    _warn_deprecated("csr_spmm")
     tiles, slabs, cols, slots, vals = csr_to_row_tiles(
         np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
         n=a.n, row_tile=row_tile, chunk=chunk, b_tile=b_tile)
@@ -108,6 +129,7 @@ def banded_spmm(band: jnp.ndarray, b: jnp.ndarray, *, t: int, w: int,
     Returns:
         ``C = A @ B`` as a dense [n, d] array.
     """
+    _warn_deprecated("banded_spmm")
     return banded_spmm_pallas(band, b, t=t, w=w, block_d=block_d,
                               interpret=_interpret(interpret))
 
@@ -136,6 +158,7 @@ def binned_spmm(a: CSRMatrix, b: jnp.ndarray, *, row_tile: int = 8,
     Returns:
         ``C = A @ B`` as a dense [n, d] array.
     """
+    _warn_deprecated("binned_spmm")
     arrays = csr_to_slab_bins(
         np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
         n=a.n, row_tile=row_tile, chunk=chunk, b_tile=b_tile)
@@ -165,6 +188,7 @@ def rowsplit_spmm(a: CSRMatrix, b: jnp.ndarray, *, chunk: int = 128,
     Returns:
         ``C = A @ B`` as a dense [n, d] array.
     """
+    _warn_deprecated("rowsplit_spmm")
     row_map, cols, slots, vals = pack_rowsplit_chunks(
         np.asarray(a.indptr), np.asarray(a.indices), np.asarray(a.data),
         n=a.n, chunk=chunk)
@@ -189,5 +213,6 @@ def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray, group_ids: jnp.ndarray,
     Returns:
         ``Y[i] = x[i] @ w[group_ids[i // bm]]`` as a dense [T, N] array.
     """
+    _warn_deprecated("grouped_matmul")
     return grouped_matmul_pallas(x, w, group_ids, bm=bm, bk=bk, bn=bn,
                                  interpret=_interpret(interpret))

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core import sparsity_models as sm
 from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec
+from repro.core.precision import DEFAULT_PRECISION, Precision
 from repro.kernels.banded_spmm import banded_spmm_pallas
 from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
 from repro.kernels.binned_spmm import (
@@ -56,8 +57,10 @@ BACKENDS: Tuple[str, ...] = ("jax", "pallas")
 #: ``plan.summary()`` can nudge when a calibration predates the kernels
 #: it would be applied to.  History: 1 = initial KernelSpec registry,
 #: 2 = per-d B-slab re-packing (``KernelContext.plan_d``),
-#: 3 = scale-free kernel tier (binned / rowsplit / ell_coo).
-REGISTRY_VERSION: int = 3
+#: 3 = scale-free kernel tier (binned / rowsplit / ell_coo),
+#: 4 = precision axis (bf16 values / int16 indices; dtype-sized slabs
+#: and footprints).
+REGISTRY_VERSION: int = 4
 
 
 def _on_tpu() -> bool:
@@ -124,9 +127,13 @@ class KernelContext:
             ``resolve_b_tile`` size the B slab for the actual d-tile
             instead of the worst-case 512 (per-d slab re-packing).  None
             keeps the conservative sizing.
+        precision: value/index storage dtypes the layouts are packed at
+            (``repro.core.precision.Precision``); sizes the VMEM slab
+            budget and footprints by the actual element widths.
         convert: optional ``(m, format) -> container`` hook so prepare
             reuses the caller's conversion cache (the dispatcher passes
-            its own ``convert`` method); None converts directly.
+            its own ``convert`` method, bound to this precision); None
+            converts directly at ``precision``'s value dtype.
     """
 
     hardware: HardwareSpec = HOST_CPU
@@ -137,6 +144,7 @@ class KernelContext:
     chunk: int = 128
     b_tile: Optional[int] = None
     plan_d: Optional[int] = None
+    precision: Precision = DEFAULT_PRECISION
     convert: Optional[Callable[[Any, str], Any]] = None
 
     def resolve_interpret(self) -> bool:
@@ -144,12 +152,17 @@ class KernelContext:
         return (not _on_tpu()) if self.interpret is None else self.interpret
 
     def resolve_b_tile(self, n: int) -> Optional[int]:
-        """The streamed-CSR slab size for an ``[n, n]`` matrix."""
+        """The streamed-CSR slab size for an ``[n, n]`` matrix.
+
+        The slab budget is charged at the operand's actual element size,
+        so bf16 streams get 2x taller slabs than fp32 for the same VMEM.
+        """
         if self.b_tile is not None:
             return self.b_tile if self.b_tile < n else None
         bd = 512 if self.plan_d is None else min(512,
                                                  pallas_block_d(self.plan_d))
-        return choose_b_tile(n, self.hardware.vmem_bytes, bd=bd)
+        return choose_b_tile(n, self.hardware.vmem_bytes, bd=bd,
+                             sizeof_val=self.precision.sizeof_val)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,6 +208,17 @@ class KernelSpec:
     #: declare it here so generic sweeps can skip them explicitly
     #: instead of special-casing format names.
     operand: str = "coo"
+    #: Precision tokens (``Precision.token``) this kernel can execute.
+    #: Every spec speaks fp32+int32; jax-backend specs add bf16 values
+    #: over their int32 containers; the Pallas packers that store
+    #: slab-local / chunk-local indices add compact int16 too (legality
+    #: of a *particular* matrix is still checked at prepare time — an
+    #: extent past ``2**15 - 1`` raises ``ValueError``).
+    supported_precisions: Tuple[str, ...] = ("f32i32",)
+
+    def supports_precision(self, precision: Precision) -> bool:
+        """True iff this kernel can execute at ``precision``."""
+        return precision.token in self.supported_precisions
 
     @property
     def key(self) -> Tuple[str, str]:
@@ -402,24 +426,27 @@ def grouped_matmul_roofline(T: int, K: int, N: int, E: int, *,
 
 def _convert(ctx: KernelContext, m, format: str):
     """Convert ``m`` to ``format``'s container, honoring ``ctx.convert``
-    (the caller's conversion cache) when provided."""
+    (the caller's conversion cache, already bound to the precision) when
+    provided; the direct path packs values at the precision's dtype."""
     if ctx.convert is not None:
         return ctx.convert(m, format)
     from repro.sparse import formats as fmt
+    dtype = ctx.precision.value_jnp
     if format == "csr":
-        return fmt.coo_to_csr(m)
+        return fmt.coo_to_csr(m, dtype=dtype)
     if format == "ell":
-        return fmt.coo_to_ell(m)
+        return fmt.coo_to_ell(m, dtype=dtype)
     if format == "bcsr":
-        return fmt.coo_to_bcsr(m, ctx.bcsr_block)
+        return fmt.coo_to_bcsr(m, ctx.bcsr_block, dtype=dtype)
     if format == "dia":
-        return fmt.coo_to_dia(m, max_offsets=ctx.max_dia_offsets)
+        return fmt.coo_to_dia(m, dtype=dtype,
+                              max_offsets=ctx.max_dia_offsets)
     if format == "binned":
-        return fmt.coo_to_binned(m)
+        return fmt.coo_to_binned(m, dtype=dtype)
     if format == "rowsplit":
-        return fmt.coo_to_rowsplit(m, chunk=ctx.chunk)
+        return fmt.coo_to_rowsplit(m, dtype=dtype, chunk=ctx.chunk)
     if format == "ell_coo":
-        return fmt.coo_to_ell_coo(m)
+        return fmt.coo_to_ell_coo(m, dtype=dtype)
     raise ValueError(f"unknown format {format!r}")
 
 
@@ -482,6 +509,11 @@ def _jax_run(format: str):
         # dispatcher's spmm *function* exported by the package __init__,
         # which shadows the submodule; go through importlib.
         jax_spmm = importlib.import_module("repro.sparse.spmm")
+        if ctx.precision.reduced:
+            # Reduced precision: B rounds to the storage dtype (the
+            # container values already are); accumulation stays fp32
+            # inside the implementations.
+            b = b.astype(ctx.precision.value_jnp)
         return jax_spmm.IMPLEMENTATIONS[format](layout, b)
     return run
 
@@ -506,6 +538,13 @@ def _zero_footprint(n: int, d: int, ctx: KernelContext) -> int:
     return 0
 
 
+#: jax-backend containers keep int32 global indices (the XLA gather
+#: operand), so the jax specs support bf16 values but not compact
+#: indices; the Pallas packers store slab-/chunk-local indices and add
+#: int16.
+_JAX_PRECISIONS = ("f32i32", "bf16i32")
+_PALLAS_STREAM_PRECISIONS = ("f32i32", "bf16i32", "bf16i16")
+
 for _f, _desc in (("csr", "gather + segment-sum (XLA)"),
                   ("ell", "padded slot scan (XLA)"),
                   ("bcsr", "batched dense-block einsum (XLA)"),
@@ -513,7 +552,8 @@ for _f, _desc in (("csr", "gather + segment-sum (XLA)"),
     register(KernelSpec(
         format=_f, backend="jax", description=_desc,
         prepare=_jax_prepare(_f), run=_jax_run(_f),
-        estimate=_jax_estimate(_f), vmem_footprint=_zero_footprint))
+        estimate=_jax_estimate(_f), vmem_footprint=_zero_footprint,
+        supported_precisions=_JAX_PRECISIONS))
 
 
 def _binned_estimate(name: str, resolve_slab):
@@ -575,7 +615,8 @@ for _f, _desc, _est in (
     register(KernelSpec(
         format=_f, backend="jax", description=_desc,
         prepare=_jax_prepare(_f), run=_jax_run(_f),
-        estimate=_est, vmem_footprint=_zero_footprint))
+        estimate=_est, vmem_footprint=_zero_footprint,
+        supported_precisions=_JAX_PRECISIONS))
 
 
 def _csr_pallas_prepare(m, ctx: KernelContext):
@@ -584,7 +625,8 @@ def _csr_pallas_prepare(m, ctx: KernelContext):
     tiles, slabs, cols, slots, vals = csr_to_row_tiles(
         np.asarray(csr.indptr), np.asarray(csr.indices),
         np.asarray(csr.data), n=csr.n, row_tile=ctx.row_tile,
-        chunk=ctx.chunk, b_tile=bt)
+        chunk=ctx.chunk, b_tile=bt,
+        index_dtype=ctx.precision.index_np)
     return {"n": csr.n, "b_tile": bt, "row_tile": ctx.row_tile,
             "arrays": tuple(jnp.asarray(x)
                             for x in (tiles, slabs, cols, slots, vals))}
@@ -592,6 +634,8 @@ def _csr_pallas_prepare(m, ctx: KernelContext):
 
 def _csr_pallas_run(layout, b, ctx: KernelContext):
     tiles, slabs, cols, slots, vals = layout["arrays"]
+    if ctx.precision.reduced:
+        b = b.astype(ctx.precision.value_jnp)
     return csr_spmm_pallas(
         tiles, slabs, cols, slots, vals, b, n=layout["n"],
         row_tile=layout["row_tile"], b_tile=layout["b_tile"],
@@ -610,8 +654,13 @@ def _csr_pallas_estimate(m, d, ctx: KernelContext) -> KernelRoofline:
 def _csr_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
     bd = min(512, pallas_block_d(d))
     bt = ctx.resolve_b_tile(n) or n
-    # Resident: B slab + C tile + gathered chunk + cols/slots/vals chunks.
-    return 4 * (bt * bd + ctx.row_tile * bd + ctx.chunk * bd + 3 * ctx.chunk)
+    sv = ctx.precision.sizeof_val
+    si = ctx.precision.sizeof_idx
+    # Resident: B slab + gathered chunk + vals chunk at the value width,
+    # cols/slots chunks at the index width, C tile always fp32 (the VMEM
+    # accumulator keeps full precision regardless of operand dtype).
+    return (sv * (bt * bd + ctx.chunk * bd + ctx.chunk)
+            + si * 2 * ctx.chunk + 4 * ctx.row_tile * bd)
 
 
 for _f in ("csr", "ell"):
@@ -624,7 +673,7 @@ for _f in ("csr", "ell"):
                     "VMEM-sized row slabs",
         prepare=_csr_pallas_prepare, run=_csr_pallas_run,
         estimate=_csr_pallas_estimate, vmem_footprint=_csr_pallas_footprint,
-        layout_key="csr"))
+        layout_key="csr", supported_precisions=_PALLAS_STREAM_PRECISIONS))
 
 
 def _binned_pallas_prepare(m, ctx: KernelContext):
@@ -633,13 +682,16 @@ def _binned_pallas_prepare(m, ctx: KernelContext):
     arrays = csr_to_slab_bins(
         np.asarray(csr.indptr), np.asarray(csr.indices),
         np.asarray(csr.data), n=csr.n, row_tile=ctx.row_tile,
-        chunk=ctx.chunk, b_tile=bt)
+        chunk=ctx.chunk, b_tile=bt,
+        index_dtype=ctx.precision.index_np)
     return {"n": csr.n, "b_tile": bt, "row_tile": ctx.row_tile,
             "arrays": tuple(jnp.asarray(x) for x in arrays)}
 
 
 def _binned_pallas_run(layout, b, ctx: KernelContext):
     vt, cv, cs, cols, slots, vals = layout["arrays"]
+    if ctx.precision.reduced:
+        b = b.astype(ctx.precision.value_jnp)
     return binned_spmm_pallas(
         vt, cv, cs, cols, slots, vals, b, n=layout["n"],
         row_tile=layout["row_tile"], b_tile=layout["b_tile"],
@@ -657,14 +709,15 @@ register(KernelSpec(
     # C block, and the gather/index chunks (the visit partials live in
     # HBM and stream through the same C-tile slot).
     vmem_footprint=_csr_pallas_footprint,
-    layout_key="binned"))
+    layout_key="binned", supported_precisions=_PALLAS_STREAM_PRECISIONS))
 
 
 def _rowsplit_pallas_prepare(m, ctx: KernelContext):
     csr = _convert(ctx, m, "csr")
     row_map, cols, slots, vals = pack_rowsplit_chunks(
         np.asarray(csr.indptr), np.asarray(csr.indices),
-        np.asarray(csr.data), n=csr.n, chunk=ctx.chunk)
+        np.asarray(csr.data), n=csr.n, chunk=ctx.chunk,
+        index_dtype=ctx.precision.index_np)
     return {"n": csr.n, "window": int(row_map.shape[1]),
             "arrays": tuple(jnp.asarray(x)
                             for x in (row_map, cols, slots, vals))}
@@ -672,6 +725,8 @@ def _rowsplit_pallas_prepare(m, ctx: KernelContext):
 
 def _rowsplit_pallas_run(layout, b, ctx: KernelContext):
     row_map, cols, slots, vals = layout["arrays"]
+    if ctx.precision.reduced:
+        b = b.astype(ctx.precision.value_jnp)
     return rowsplit_spmm_pallas(
         row_map, cols, slots, vals, b, n=layout["n"],
         window=layout["window"], block_d=pallas_block_d(b.shape[1]),
@@ -681,10 +736,13 @@ def _rowsplit_pallas_run(layout, b, ctx: KernelContext):
 def _rowsplit_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
     bd = min(512, pallas_block_d(d))
     n_pad = -(-n // 8) * 8
+    sv = ctx.precision.sizeof_val
+    si = ctx.precision.sizeof_idx
     # Whole B resident (the load-balance kernel does not stream B) plus
-    # the widest possible window partial and the gather/index chunks.
-    return 4 * (n_pad * bd + ctx.chunk * bd + ctx.chunk * bd
-                + 3 * ctx.chunk)
+    # the gather chunk and vals at the value width, cols/slots at the
+    # index width, and the fp32 window partial.
+    return (sv * (n_pad * bd + ctx.chunk * bd + ctx.chunk)
+            + si * 2 * ctx.chunk + 4 * ctx.chunk * bd)
 
 
 register(KernelSpec(
@@ -694,7 +752,7 @@ register(KernelSpec(
     prepare=_rowsplit_pallas_prepare, run=_rowsplit_pallas_run,
     estimate=_rowsplit_estimate("rowsplit_spmm"),
     vmem_footprint=_rowsplit_pallas_footprint,
-    layout_key="rowsplit"))
+    layout_key="rowsplit", supported_precisions=_PALLAS_STREAM_PRECISIONS))
 
 
 # The hybrid ELL/COO pick lowers to the row-tiled CSR kernel on TPU
@@ -708,7 +766,7 @@ register(KernelSpec(
     prepare=_csr_pallas_prepare, run=_csr_pallas_run,
     estimate=_ell_coo_estimate("ell_coo_spmm"),
     vmem_footprint=_csr_pallas_footprint,
-    layout_key="csr"))
+    layout_key="csr", supported_precisions=_PALLAS_STREAM_PRECISIONS))
 
 
 def _bcsr_pallas_prepare(m, ctx: KernelContext):
@@ -716,6 +774,8 @@ def _bcsr_pallas_prepare(m, ctx: KernelContext):
 
 
 def _bcsr_pallas_run(layout, b, ctx: KernelContext):
+    if ctx.precision.reduced:
+        b = b.astype(ctx.precision.value_jnp)
     return bcsr_spmm_pallas(
         layout.blocks, layout.block_rows, layout.block_cols, b,
         n=layout.n, t=layout.t, block_d=pallas_block_d(b.shape[1]),
@@ -737,14 +797,19 @@ def _bcsr_estimate(m, d, ctx: KernelContext) -> KernelRoofline:
 
 def _bcsr_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
     t, bd = ctx.bcsr_block, min(512, pallas_block_d(d))
-    return 4 * (t * t + 2 * t * bd)
+    # Block + B tile at the value width; the C tile accumulates in fp32.
+    sv = ctx.precision.sizeof_val
+    return sv * (t * t + t * bd) + 4 * t * bd
 
 
 register(KernelSpec(
     format="bcsr", backend="pallas",
     description="dense-block MXU kernel (scalar-prefetch block walk)",
     prepare=_bcsr_pallas_prepare, run=_bcsr_pallas_run,
-    estimate=_bcsr_estimate, vmem_footprint=_bcsr_pallas_footprint))
+    estimate=_bcsr_estimate, vmem_footprint=_bcsr_pallas_footprint,
+    # Block coordinates are scalar-prefetch metadata, not per-nonzero
+    # traffic, so bcsr gains nothing from int16 and keeps int32.
+    supported_precisions=_JAX_PRECISIONS))
 
 
 def _dia_pallas_prepare(m, ctx: KernelContext):
@@ -755,6 +820,8 @@ def _dia_pallas_prepare(m, ctx: KernelContext):
 
 
 def _dia_pallas_run(layout, b, ctx: KernelContext):
+    if ctx.precision.reduced:
+        b = b.astype(ctx.precision.value_jnp)
     return banded_spmm_pallas(
         layout["band"], b, t=layout["t"], w=layout["w"],
         block_d=pallas_block_d(b.shape[1]),
@@ -767,14 +834,18 @@ def _dia_pallas_estimate(m, d, ctx: KernelContext) -> KernelRoofline:
 
 def _dia_pallas_footprint(n: int, d: int, ctx: KernelContext) -> int:
     t, bd = pallas_band_tile(n), min(512, pallas_block_d(d))
-    return 4 * (t * t + 2 * t * bd)
+    sv = ctx.precision.sizeof_val
+    return sv * (t * t + t * bd) + 4 * t * bd
 
 
 register(KernelSpec(
     format="dia", backend="pallas",
     description="block-band kernel (B streamed once)",
     prepare=_dia_pallas_prepare, run=_dia_pallas_run,
-    estimate=_dia_pallas_estimate, vmem_footprint=_dia_pallas_footprint))
+    estimate=_dia_pallas_estimate, vmem_footprint=_dia_pallas_footprint,
+    # DIA stores no per-nonzero indices at all (offsets are static), so
+    # the index axis is moot; bf16 values still halve the band traffic.
+    supported_precisions=_JAX_PRECISIONS))
 
 
 def _grouped_prepare(operand, ctx: KernelContext):

@@ -11,11 +11,13 @@ right-hand sides (``docs/serving.md``).  The per-format implementations
 remain exported for direct use.
 """
 from repro.sparse.formats import (
-    BCSRMatrix, BinnedMatrix, CSRMatrix, DIAMatrix, ELLCOOMatrix, ELLMatrix,
-    RowSplitMatrix,
+    BCSRMatrix, BinnedMatrix, CSRMatrix, DEFAULT_PRECISION, DIAMatrix,
+    ELLCOOMatrix, ELLMatrix, INT16_MAX_EXTENT, PRECISION_BF16,
+    PRECISION_BF16_I32, PRECISION_FP32, PRECISIONS, Precision,
+    RowSplitMatrix, as_precision,
     coo_to_bcsr, coo_to_binned, coo_to_csr, coo_to_dense, coo_to_dia,
     coo_to_ell, coo_to_ell_coo, coo_to_rowsplit, ell_coo_cutoff,
-    nnz_balanced_splits,
+    int16_extent_ok, nnz_balanced_splits,
 )
 from repro.sparse.spmm import (
     IMPLEMENTATIONS, bcsr_spmm, bcsr_spmm_scan, binned_spmm, csr_spmm,
@@ -39,6 +41,9 @@ __all__ = [
     "coo_to_bcsr", "coo_to_binned", "coo_to_csr", "coo_to_dense",
     "coo_to_dia", "coo_to_ell", "coo_to_ell_coo", "coo_to_rowsplit",
     "ell_coo_cutoff", "nnz_balanced_splits",
+    "Precision", "PRECISIONS", "PRECISION_FP32", "PRECISION_BF16",
+    "PRECISION_BF16_I32", "DEFAULT_PRECISION", "INT16_MAX_EXTENT",
+    "as_precision", "int16_extent_ok",
     "IMPLEMENTATIONS", "bcsr_spmm", "bcsr_spmm_scan", "binned_spmm",
     "csr_spmm", "dense_spmm", "dia_spmm", "ell_coo_spmm", "ell_spmm",
     "rowsplit_spmm",

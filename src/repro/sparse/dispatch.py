@@ -46,6 +46,8 @@ import numpy as np
 
 from repro.core.calibrate import CalibrationStore
 from repro.core.classify import StructureReport, block_stats, classify
+from repro.core.precision import (DEFAULT_PRECISION, INT16_MAX_EXTENT,
+                                  PRECISIONS, Precision, as_precision)
 from repro.data.dtree import (DecisionTree, DispatchTreeStore,
                               features_from_report)
 from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec
@@ -93,7 +95,7 @@ DEFAULT_EFFICIENCY: Dict[str, Tuple[float, float]] = {
 
 @dataclasses.dataclass(frozen=True)
 class CandidateEval:
-    """One format's audit record inside a DispatchPlan."""
+    """One (format, precision) audit record inside a DispatchPlan."""
 
     format: str
     eligible: bool
@@ -106,6 +108,13 @@ class CandidateEval:
     params: dict = dataclasses.field(default_factory=dict)
     #: Compute-ceiling provenance: "default" | "calibrated" | "override".
     ceiling_source: str = "default"
+    #: Storage precision token this row was modeled at
+    #: (``repro.core.precision.Precision.token``): "f32i32" | "bf16i32" |
+    #: "bf16i16".  Reduced-precision rows gated out by the caller's
+    #: ``tolerance`` (or an int16-illegal extent) keep their predictions
+    #: for audit but carry ``eligible=False`` and the gate's
+    #: ``skip_reason``.
+    precision: str = "f32i32"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +129,12 @@ class DispatchPlan:
     backend: str                      # "jax" | "pallas"
     hardware: str                     # HardwareSpec.name used for prediction
     candidates: Tuple[CandidateEval, ...]
+    #: Winning storage precision (token): the layouts are packed and the
+    #: kernel launched at these value/index dtypes.
+    precision: str = "f32i32"
+    #: The relative error budget the accuracy gate ran with; reduced
+    #: value dtypes were eligible only where ``tolerance >= dtype eps``.
+    tolerance: float = 0.0
     #: Staleness warning from the CalibrationStore (fingerprint mismatch
     #: or a calibration predating the kernel registry version); None when
     #: the store is silent.  Rendered by :meth:`summary`.
@@ -135,41 +150,79 @@ class DispatchPlan:
 
     @property
     def skips(self) -> Dict[str, str]:
-        """format -> reason, for every policy-rejected candidate."""
+        """format -> reason, for every policy-rejected candidate.
+
+        Keyed off the baseline fp32 rows (every format has one and the
+        baseline is never precision-gated), so the reasons here are
+        exactly the structural policy reasons; precision-gate rejections
+        live in :attr:`precision_skips`.
+        """
         return {c.format: c.skip_reason for c in self.candidates
-                if not c.eligible}
+                if not c.eligible and c.precision == "f32i32"}
+
+    @property
+    def precision_skips(self) -> Dict[Tuple[str, str], str]:
+        """(format, precision) -> reason for precision-gated rows.
+
+        Only rows whose *precision* was rejected (tolerance too tight for
+        bf16, int16 extent overflow) appear; rows skipped for structural
+        policy are in :attr:`skips`.
+        """
+        return {(c.format, c.precision): c.skip_reason
+                for c in self.candidates
+                if not c.eligible and c.precision != "f32i32"
+                and c.format not in self.skips}
 
     @property
     def ceiling_sources(self) -> Dict[str, str]:
         """format -> compute-ceiling provenance (default/calibrated/override)."""
         return {c.format: c.ceiling_source for c in self.candidates}
 
-    def candidate(self, name: str) -> CandidateEval:
+    def candidate(self, name: str,
+                  precision: Optional[str] = None) -> CandidateEval:
         """Return the :class:`CandidateEval` for format ``name``.
 
         Args:
             name: one of ``FORMATS`` (``"csr" | "ell" | "bcsr" | "dia" |
                 "binned" | "rowsplit" | "ell_coo"``).
+            precision: a precision token ("f32i32", "bf16i32", "bf16i16")
+                to pick that exact row.  ``None`` returns the row the
+                plan actually ranked for this format: the chosen row when
+                ``name`` won, else the best eligible row, else the fp32
+                baseline.
 
         Returns:
-            The audit record for that format.
+            The audit record for that (format, precision).
 
         Raises:
-            KeyError: if ``name`` was not evaluated in this plan.
+            KeyError: if the pair was not evaluated in this plan.
         """
-        for c in self.candidates:
-            if c.format == name:
-                return c
-        raise KeyError(name)
+        if precision is not None:
+            token = as_precision(precision).token
+            for c in self.candidates:
+                if c.format == name and c.precision == token:
+                    return c
+            raise KeyError((name, token))
+        if name == self.chosen:
+            return self.candidate(name, self.precision)
+        rows = [c for c in self.candidates if c.format == name]
+        if not rows:
+            raise KeyError(name)
+        eligible = [c for c in rows if c.eligible]
+        if eligible:
+            return max(eligible, key=lambda c: c.amortized_gflops or 0.0)
+        return next(c for c in rows if c.precision == "f32i32")
 
     def summary(self) -> str:
         """Render the decision as a human-readable multi-line table."""
         lines = [f"DispatchPlan(regime={self.regime}, d={self.d}, "
                  f"backend={self.backend}, hw={self.hardware}, "
-                 f"reuse={self.reuse}, decision={self.decision_source})"
-                 f" -> {self.chosen}"]
+                 f"reuse={self.reuse}, tol={self.tolerance:.1e}, "
+                 f"decision={self.decision_source})"
+                 f" -> {self.chosen} @ {self.precision}"]
         for c in self.candidates:
-            mark = "*" if c.format == self.chosen else " "
+            mark = "*" if (c.format == self.chosen
+                           and c.precision == self.precision) else " "
             if c.predicted_gflops is not None:
                 perf = (f"AI={c.ai:6.3f}  pred={c.predicted_gflops:7.2f}"
                         f"  amort={c.amortized_gflops:7.2f} GF/s"
@@ -177,7 +230,8 @@ class DispatchPlan:
             else:
                 perf = "(not modeled)"
             tail = "" if c.eligible else f"  SKIP: {c.skip_reason}"
-            lines.append(f" {mark} {c.format:4s} {perf}{tail}")
+            lines.append(f" {mark} {c.format:8s} {c.precision:7s} "
+                         f"{perf}{tail}")
         if self.decision_path:
             lines.append(" ~ tree: " + " -> ".join(self.decision_path))
         if self.calibration_note:
@@ -219,12 +273,15 @@ class Dispatcher:
                  efficiency: Optional[Dict[str, Tuple[float, float]]] = None,
                  calibration=None,
                  tree=None, tree_margin: float = 0.10,
-                 sizeof_val: int = 4, sizeof_idx: int = 4):
+                 sizeof_val: int = 4, sizeof_idx: int = 4,
+                 tolerance: float = 0.0):
         if backend not in ("auto", "jax", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if not 0.0 <= tree_margin < 1.0:
             raise ValueError(f"tree_margin must be in [0, 1), "
                              f"got {tree_margin}")
+        if tolerance < 0.0:
+            raise ValueError(f"tolerance must be >= 0, got {tolerance}")
         self.backend = backend
         self.hardware = hardware
         self.reuse = reuse
@@ -253,8 +310,17 @@ class Dispatcher:
         self._cal_cache: Dict[str, Dict[str, Tuple[float, float]]] = {}
         self._note_cache: Dict[tuple, Optional[str]] = {}
         self._tree_cache: Dict[str, Optional[DecisionTree]] = {}
+        #: Legacy fp32 element sizes (kept for external byte-model
+        #: callers, e.g. ``repro.sparse.shard``); the candidate models
+        #: themselves size traffic from each row's ``Precision``.
         self.sizeof_val = sizeof_val
         self.sizeof_idx = sizeof_idx
+        #: Default relative error budget of the accuracy gate: reduced
+        #: value dtypes (bf16) are auto-eligible only when the budget
+        #: covers the dtype's rounding (``tolerance >= eps``).  The fp32
+        #: default 0.0 means "exact": auto dispatch never degrades
+        #: numerics unless the caller opts in per-plan or per-dispatcher.
+        self.tolerance = tolerance
         self._plans: Dict[tuple, DispatchPlan] = {}
         self._converted: Dict[tuple, object] = {}
         self._reports: Dict[int, StructureReport] = {}
@@ -284,24 +350,33 @@ class Dispatcher:
             self._reports[key] = classify(m)
         return self._reports[key]
 
-    def convert(self, m: COOMatrix, format: str):
-        """Convert (and cache) m into ``format``'s container."""
-        key = (self._track(m), format, self.bcsr_block)
+    def convert(self, m: COOMatrix, format: str, precision=None):
+        """Convert (and cache) m into ``format``'s container.
+
+        ``precision`` (a :class:`Precision`, token string, or ``None``
+        for fp32) sets the packed *value* dtype and is part of the cache
+        key; containers keep int32 indices — compact int16 indices are a
+        property of the Pallas layout packing, not of the container.
+        """
+        prec = as_precision(precision)
+        key = (self._track(m), format, self.bcsr_block, prec.value_dtype)
         if key not in self._converted:
+            dtype = prec.value_jnp
             if format == "csr":
-                out = fmt.coo_to_csr(m)
+                out = fmt.coo_to_csr(m, dtype=dtype)
             elif format == "ell":
-                out = fmt.coo_to_ell(m)
+                out = fmt.coo_to_ell(m, dtype=dtype)
             elif format == "bcsr":
-                out = fmt.coo_to_bcsr(m, self.bcsr_block)
+                out = fmt.coo_to_bcsr(m, self.bcsr_block, dtype=dtype)
             elif format == "dia":
-                out = fmt.coo_to_dia(m, max_offsets=self.max_dia_offsets)
+                out = fmt.coo_to_dia(m, dtype=dtype,
+                                     max_offsets=self.max_dia_offsets)
             elif format == "binned":
-                out = fmt.coo_to_binned(m)
+                out = fmt.coo_to_binned(m, dtype=dtype)
             elif format == "rowsplit":
-                out = fmt.coo_to_rowsplit(m, chunk=128)
+                out = fmt.coo_to_rowsplit(m, dtype=dtype, chunk=128)
             elif format == "ell_coo":
-                out = fmt.coo_to_ell_coo(m)
+                out = fmt.coo_to_ell_coo(m, dtype=dtype)
             else:
                 raise ValueError(f"unknown format {format!r}")
             self._converted[key] = out
@@ -311,21 +386,26 @@ class Dispatcher:
     # Modeling
     # ----------------------------------------------------------------- #
 
-    def _calibrated(self, hw: HardwareSpec,
-                    backend: str) -> Dict[str, Tuple[float, float]]:
+    def _calibrated(self, hw: HardwareSpec, backend: str,
+                    precision: str = "f32i32"
+                    ) -> Dict[str, Tuple[float, float]]:
         """The persisted calibration for ``(hw, backend)`` ({} if absent).
 
         The backend is part of the key: jax and pallas ceilings describe
         different kernel implementations, so a calibration fitted for one
-        must never answer for the other.
+        must never answer for the other.  ``precision`` selects
+        dtype-specific fits where the calibration has them (ceilings are
+        fitted per (format, dtype) since registry v4), falling back to
+        the format's fp32 fit otherwise.
         """
         if self.calibration is False:
             return {}
-        key = (hw.fingerprint(), backend)
+        key = (hw.fingerprint(), backend, precision)
         if key not in self._cal_cache:
             store = self.calibration or CalibrationStore()
             cal = store.load(hw, backend)
-            self._cal_cache[key] = cal.efficiency() if cal else {}
+            self._cal_cache[key] = \
+                cal.efficiency(precision=precision) if cal else {}
         return self._cal_cache[key]
 
     def _staleness(self, hw: HardwareSpec, backend: str) -> Optional[str]:
@@ -365,19 +445,20 @@ class Dispatcher:
             self._tree_cache[backend] = DispatchTreeStore().load(backend)
         return self._tree_cache[backend]
 
-    def _ceiling(self, format: str, hw: HardwareSpec,
-                 backend: str) -> ComputeCeiling:
+    def _ceiling(self, format: str, hw: HardwareSpec, backend: str,
+                 precision: str = "f32i32") -> ComputeCeiling:
         """Resolve the compute ceiling with provenance.
 
         Order: an explicit ``efficiency=`` entry from the constructor
         ("override") > a persisted on-host calibration matching the
-        HardwareSpec fingerprint and resolved backend ("calibrated") >
-        the baked-in ``DEFAULT_EFFICIENCY`` constants ("default").
+        HardwareSpec fingerprint and resolved backend ("calibrated",
+        dtype-specific fit preferred, the format's fp32 fit as fallback)
+        > the baked-in ``DEFAULT_EFFICIENCY`` constants ("default").
         """
         if format in self._overridden:
             return ComputeCeiling(*self.efficiency[format],
                                   source="override")
-        calibrated = self._calibrated(hw, backend)
+        calibrated = self._calibrated(hw, backend, precision)
         if format in calibrated:
             return ComputeCeiling(*calibrated[format], source="calibrated")
         return ComputeCeiling(*self.efficiency[format], source="default")
@@ -457,16 +538,19 @@ class Dispatcher:
 
     def _model(self, m: COOMatrix, report: StructureReport, format: str,
                params: dict, d: int, hw: HardwareSpec, reuse: int,
-               backend: str
+               backend: str, prec: Precision = DEFAULT_PRECISION
                ) -> Tuple[float, float, float, float, float, str]:
         """(ai, useful_fraction, predicted, amortized, conv_bytes, source).
 
         AI composes structure and storage: the B-traffic term comes from
         the detected regime's Section III model (structure controls B
         reuse no matter how A is stored), the A-traffic term from the
-        format's actual storage footprint.
+        format's actual storage footprint.  Every byte term is sized by
+        ``prec``'s actual element widths — the precision axis changes
+        *traffic*, not FLOPs, which is exactly why it moves the
+        bandwidth roofline ``beta * AI``.
         """
-        sv, si = self.sizeof_val, self.sizeof_idx
+        sv, si = prec.sizeof_val, prec.sizeof_idx
         n, nnz = m.n, m.nnz
         flops = sm.flops_spmm(nnz, d)
         regime_tb = report.traffic(d, sizeof_val=sv, sizeof_idx=si)
@@ -504,7 +588,8 @@ class Dispatcher:
             # imports this package for its format containers.)
             from repro.kernels import registry as kreg
             slab = kreg.choose_b_tile(
-                n, hw.vmem_bytes, bd=min(512, kreg.pallas_block_d(d))) or n
+                n, hw.vmem_bytes, bd=min(512, kreg.pallas_block_d(d)),
+                sizeof_val=sv) or n
             touched, visits = kreg.binned_layout_stats(m, slab_rows=slab)
             tb = sm.ai_binned(n, nnz, d, slab_rows=slab,
                               slabs_touched=touched, num_visits=visits,
@@ -546,7 +631,7 @@ class Dispatcher:
 
         ai = flops / (bytes_a + bytes_b + bytes_c)
         bandwidth_roof = hw.hbm_bandwidth * ai
-        ceiling = self._ceiling(format, hw, backend)
+        ceiling = self._ceiling(format, hw, backend, prec.token)
         compute_roof = ceiling.attainable(hw.peak_flops, useful, d)
         predicted = min(bandwidth_roof, compute_roof)
         if flops <= 0 or predicted <= 0:   # empty matrix: nothing to do
@@ -557,12 +642,55 @@ class Dispatcher:
         return (ai, useful, predicted / 1e9, amortized / 1e9, conv,
                 ceiling.source)
 
+    def _index_extent(self, m: COOMatrix, format: str, d: int,
+                      hw: HardwareSpec, prec: Precision) -> int:
+        """The largest extent a packed index of this layout addresses.
+
+        Slab-streamed Pallas layouts (csr / ell / binned / ell_coo)
+        store slab-local column ids, so the extent is the B row-slab
+        size (the whole matrix when B fits unstreamed); the rowsplit
+        packing keeps *global* column ids, so its extent is always n.
+        Matches the packers' own ``index_extent_check`` at prepare time.
+        """
+        if format == "rowsplit":
+            return m.n
+        from repro.kernels import registry as kreg
+        bt = kreg.choose_b_tile(
+            m.n, hw.vmem_bytes, bd=min(512, kreg.pallas_block_d(d)),
+            sizeof_val=prec.sizeof_val)
+        return m.n if bt is None else bt
+
+    def _precision_gate(self, m: COOMatrix, format: str, prec: Precision,
+                        d: int, hw: HardwareSpec, tolerance: float,
+                        forced: bool) -> Tuple[bool, Optional[str]]:
+        """Accuracy/legality gate for one (format, precision) row.
+
+        int16 extent legality is *correctness* and never waived; the
+        bf16 tolerance gate is *preference* — an explicitly forced
+        ``precision=`` is itself the opt-in and bypasses it, exactly as
+        a forced strategy bypasses the auto ranking (but not policy).
+        """
+        if prec.index_dtype == "int16":
+            extent = self._index_extent(m, format, d, hw, prec)
+            if not fmt.int16_extent_ok(extent):
+                return False, (
+                    f"int16 indices cannot address extent {extent} "
+                    f"(> {INT16_MAX_EXTENT}; the packers reserve a "
+                    f"sentinel slot equal to the extent)")
+        if prec.reduced and not forced and tolerance < prec.eps:
+            return False, (
+                f"bf16 values round at eps={prec.eps:.1e} > tolerance "
+                f"{tolerance:.1e}; pass tolerance= or force precision= "
+                f"to opt in")
+        return True, None
+
     # ----------------------------------------------------------------- #
     # Public API
     # ----------------------------------------------------------------- #
 
     def plan(self, m: COOMatrix, d: int, *, strategy: str = "auto",
-             reuse: Optional[int] = None) -> DispatchPlan:
+             reuse: Optional[int] = None, precision=None,
+             tolerance: Optional[float] = None) -> DispatchPlan:
         """Plan (and cache) the (format, kernel) choice for ``(m, d)``.
 
         Args:
@@ -575,6 +703,19 @@ class Dispatcher:
                 dispatcher's ``reuse`` (32).  Higher values let formats with
                 expensive one-time conversions (e.g. BCSR's dense blocks)
                 win on amortized throughput.
+            precision: force one precision (a token like ``"bf16"`` /
+                ``"bf16i16"`` / ``"fp32"``, or a ``Precision``) the way a
+                format name forces ``strategy`` — restricting every
+                candidate to that row.  Forcing is itself the accuracy
+                opt-in (the bf16 tolerance gate is waived), but int16
+                extent legality still raises.  ``None`` enumerates every
+                precision each kernel supports and lets the roofline
+                ranking pick.
+            tolerance: relative error budget of the accuracy gate for
+                this plan (defaults to the dispatcher's ``tolerance``,
+                0.0).  Reduced value dtypes are auto-eligible only when
+                ``tolerance >= dtype eps`` (bf16: ~7.8e-3); gated rows
+                stay in the audit with a recorded skip reason.
 
         Under ``strategy="auto"``, when a fitted dispatch tree is
         available (see the ``tree`` constructor arg) and the analytic
@@ -586,9 +727,11 @@ class Dispatcher:
             The cached :class:`DispatchPlan` with per-candidate predictions.
 
         Raises:
-            ValueError: on an unknown strategy, ``d < 1``, or a forced
+            ValueError: on an unknown strategy, ``d < 1``, a forced
                 format the applicability policy rejects for this matrix
-                (the error carries the recorded skip reason).
+                (the error carries the recorded skip reason), or a forced
+                precision no eligible kernel can run here (unsupported
+                by the (format, backend) specs, or int16-illegal extent).
         """
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {strategy!r}; choose from "
@@ -596,6 +739,9 @@ class Dispatcher:
         if d < 1:
             raise ValueError(f"dense width d must be >= 1, got {d}")
         reuse = self.reuse if reuse is None else reuse
+        tolerance = self.tolerance if tolerance is None else float(tolerance)
+        forced_tok = None if precision is None \
+            else as_precision(precision).token
         backend = self._resolve_backend()
         hw = self._resolve_hardware(backend)
         # The fitted tree is part of the plan identity: refitting (or
@@ -603,66 +749,100 @@ class Dispatcher:
         tree = self._tree(backend) if strategy == "auto" else None
         tree_token = tree.fingerprint() if tree is not None else "none"
         key = (self._track(m), d, strategy, reuse, backend, hw.name,
-               tree_token, self.tree_margin)
+               tree_token, self.tree_margin, forced_tok, tolerance)
         if key in self._plans:
             return self._plans[key]
 
+        from repro.kernels import registry as kreg
         report = self._report(m)
         cands = []
         for f in FORMATS:
             eligible, reason, params = self._policy(m, report, f)
-            source = "default"
-            try:
-                ai, useful, pred, amort, conv, source = self._model(
-                    m, report, f, params, d, hw, reuse, backend)
-            except (KeyError, ValueError):
-                ai = useful = pred = amort = conv = None
-            cands.append(CandidateEval(
-                format=f, eligible=eligible, skip_reason=reason, ai=ai,
-                useful_fraction=useful, predicted_gflops=pred,
-                amortized_gflops=amort, conversion_bytes=conv,
-                params=params, ceiling_source=source))
+            spec_tokens = kreg.get(f, backend).supported_precisions
+            for prec in PRECISIONS:
+                if prec.token not in spec_tokens:
+                    continue
+                p_ok, p_reason = self._precision_gate(
+                    m, f, prec, d, hw, tolerance,
+                    forced=prec.token == forced_tok)
+                source = "default"
+                row_params = dict(params)
+                try:
+                    ai, useful, pred, amort, conv, source = self._model(
+                        m, report, f, row_params, d, hw, reuse, backend,
+                        prec)
+                except (KeyError, ValueError):
+                    ai = useful = pred = amort = conv = None
+                cands.append(CandidateEval(
+                    format=f, eligible=eligible and p_ok,
+                    skip_reason=reason if not eligible else p_reason,
+                    ai=ai, useful_fraction=useful, predicted_gflops=pred,
+                    amortized_gflops=amort, conversion_bytes=conv,
+                    params=row_params, ceiling_source=source,
+                    precision=prec.token))
 
+        pool = cands if forced_tok is None else \
+            [c for c in cands if c.precision == forced_tok]
         decision_source, decision_path = "analytic", ()
         if strategy == "auto":
-            viable = [c for c in cands
+            viable = [c for c in pool
                       if c.eligible and c.amortized_gflops is not None]
-            if not viable:   # CSR is always eligible; belt and braces
-                viable = [c for c in cands if c.format == "csr"]
+            if not viable:
+                if forced_tok is not None:
+                    raise ValueError(
+                        f"no eligible kernel on backend {backend!r} can "
+                        f"run precision {forced_tok!r} for this matrix")
+                # CSR at fp32 is always eligible; belt and braces.
+                viable = [c for c in cands
+                          if c.format == "csr" and c.precision == "f32i32"]
             ranked = sorted(viable, key=lambda c: c.amortized_gflops or 0.0,
                             reverse=True)
-            chosen = ranked[0].format
+            # Tie-breaking and the tree speak *formats*: collapse to the
+            # best precision row per format before ranking gaps, so two
+            # precisions of one format never masquerade as a near-tie.
+            best_by_fmt: Dict[str, CandidateEval] = {}
+            for c in ranked:
+                best_by_fmt.setdefault(c.format, c)
+            franked = list(best_by_fmt.values())
+            chosen_c = franked[0]
             # Learned fallback (SpChar): only where the analytic model
             # cannot separate its top two candidates.  The tree's pick
             # must itself be within the margin of the analytic winner —
             # the tree breaks ties, it never overrules a confident
             # roofline ranking — so any tree-induced regression is
             # bounded by tree_margin by construction.
-            if tree is not None and len(ranked) >= 2:
-                top = ranked[0].amortized_gflops or 0.0
-                gap = (top - (ranked[1].amortized_gflops or 0.0)) \
+            if tree is not None and len(franked) >= 2:
+                top = franked[0].amortized_gflops or 0.0
+                gap = (top - (franked[1].amortized_gflops or 0.0)) \
                     / max(top, 1e-12)
                 if gap <= self.tree_margin:
                     x = features_from_report(report, d)
                     pick = tree.predict(x)
-                    near = {c.format for c in ranked
+                    near = {c.format for c in franked
                             if top - (c.amortized_gflops or 0.0)
                             <= self.tree_margin * top}
                     if pick in near:
-                        chosen = pick
+                        chosen_c = best_by_fmt[pick]
                         decision_source = "tree"
                         decision_path = tree.decision_path(x)
         else:
-            forced = next(c for c in cands if c.format == strategy)
-            if not forced.eligible:
+            rows = [c for c in pool if c.format == strategy]
+            if not rows:
+                raise ValueError(
+                    f"kernel ({strategy!r}, {backend!r}) does not "
+                    f"support precision {forced_tok!r}")
+            eligible_rows = [c for c in rows if c.eligible]
+            if not eligible_rows:
                 raise ValueError(
                     f"strategy {strategy!r} is policy-ineligible for "
-                    f"this matrix: {forced.skip_reason}")
-            chosen = strategy
+                    f"this matrix: {rows[0].skip_reason}")
+            chosen_c = max(eligible_rows,
+                           key=lambda c: c.amortized_gflops or 0.0)
         plan = DispatchPlan(
-            chosen=chosen, strategy=strategy, regime=report.regime, d=d,
-            reuse=reuse, backend=backend, hardware=hw.name,
-            candidates=tuple(cands),
+            chosen=chosen_c.format, strategy=strategy, regime=report.regime,
+            d=d, reuse=reuse, backend=backend, hardware=hw.name,
+            candidates=tuple(cands), precision=chosen_c.precision,
+            tolerance=tolerance,
             calibration_note=self._staleness(hw, backend),
             decision_source=decision_source, decision_path=decision_path)
         self._plans[key] = plan
@@ -670,7 +850,8 @@ class Dispatcher:
 
     def spmm(self, m: COOMatrix, b: jnp.ndarray, *,
              strategy: str = "auto",
-             reuse: Optional[int] = None) -> jnp.ndarray:
+             reuse: Optional[int] = None, precision=None,
+             tolerance: Optional[float] = None) -> jnp.ndarray:
         """Compute ``C = A @ B`` through the planned (format, kernel) pair.
 
         Args:
@@ -678,19 +859,26 @@ class Dispatcher:
             b: dense right-hand side, ``[n, d]``.
             strategy: ``"auto"`` or a forced format name (see :meth:`plan`).
             reuse: conversion amortization horizon (see :meth:`plan`).
+            precision: force one storage precision (see :meth:`plan`).
+            tolerance: accuracy-gate budget for reduced precisions (see
+                :meth:`plan`).
 
         Returns:
-            ``C`` as a dense ``[n, d]`` array.
+            ``C`` as a dense ``[n, d]`` array.  Under a reduced plan
+            precision the kernel rounds B to the storage dtype and
+            returns C in it (accumulation stays fp32 throughout).
 
         Raises:
             ValueError: on a shape-incompatible ``b``, or a forced format
-                the policy rejects for this matrix (see :meth:`plan`).
+                / precision the policy rejects for this matrix (see
+                :meth:`plan`).
         """
         if b.ndim != 2 or b.shape[0] != m.n:
             raise ValueError(
                 f"operand shape {tuple(b.shape)} incompatible with "
                 f"[{m.n}, {m.n}] sparse matrix; expected [{m.n}, d]")
-        plan = self.plan(m, int(b.shape[1]), strategy=strategy, reuse=reuse)
+        plan = self.plan(m, int(b.shape[1]), strategy=strategy, reuse=reuse,
+                         precision=precision, tolerance=tolerance)
         return self.executor(m, plan)(b)
 
     def executor(self, m: COOMatrix,
@@ -720,17 +908,27 @@ class Dispatcher:
         # package for its format containers.)
         from repro.kernels import registry
         spec = registry.get(plan.chosen, plan.backend)
+        prec = as_precision(plan.precision)
+
+        def _convert(mm, format, _prec=prec):
+            # prepare shares the conversion cache, pinned to the plan's
+            # precision (the registry's hook is two-argument).
+            return self.convert(mm, format, precision=_prec)
+
         ctx = registry.KernelContext(
             hardware=self._resolve_hardware(plan.backend),
             bcsr_block=self.bcsr_block,
             max_dia_offsets=self.max_dia_offsets,
             plan_d=plan.d,          # per-d B-slab re-packing
-            convert=self.convert)   # prepare shares the conversion cache
-        # The resolved d-tile is part of the layout identity: two plans
-        # whose widths map to different slab sizings must not share one
-        # packed layout.
+            precision=prec,         # dtype-sized slabs, packed indices
+            convert=_convert)
+        # The resolved d-tile and the storage precision are part of the
+        # layout identity: two plans whose widths map to different slab
+        # sizings, or whose layouts pack different dtypes, must not
+        # share one packed layout.
         ck = (self._track(m), "layout", *spec.layout_cache_key,
-              self.bcsr_block, registry.pallas_block_d(plan.d))
+              self.bcsr_block, registry.pallas_block_d(plan.d),
+              prec.token)
         if ck not in self._converted:
             self._converted[ck] = spec.prepare(m, ctx)
         layout = self._converted[ck]
@@ -747,7 +945,8 @@ def default_dispatcher() -> Dispatcher:
 
 
 def plan_spmm(m: COOMatrix, d: int, *, strategy: str = "auto",
-              reuse: Optional[int] = None) -> DispatchPlan:
+              reuse: Optional[int] = None, precision=None,
+              tolerance: Optional[float] = None) -> DispatchPlan:
     """Plan the (format, kernel) choice for ``(m, d)`` on the default dispatcher.
 
     Args:
@@ -755,20 +954,27 @@ def plan_spmm(m: COOMatrix, d: int, *, strategy: str = "auto",
         d: dense operand width.
         strategy: ``"auto"`` or a format from ``FORMATS`` to force.
         reuse: conversion amortization horizon (default 32 executions).
+        precision: ``None`` (enumerate every supported precision, gated
+            by ``tolerance``) or a forced precision token / ``Precision``
+            (``"fp32"``, ``"bf16"``, ``"bf16i32"``, ``"bf16i16"``).
+        tolerance: relative error budget enabling reduced value dtypes
+            (bf16 needs ~7.8e-3); default 0.0 keeps dispatch exact.
 
     Returns:
         An inspectable :class:`DispatchPlan`; ``plan.summary()`` renders the
-        per-candidate predictions and skip reasons.
+        per-candidate predictions, precisions, and skip reasons.
 
     Raises:
         ValueError: on an unknown strategy, ``d < 1``, or a forced format
-            the applicability policy rejects for this matrix.
+            / precision the policy rejects for this matrix.
     """
-    return _DEFAULT.plan(m, d, strategy=strategy, reuse=reuse)
+    return _DEFAULT.plan(m, d, strategy=strategy, reuse=reuse,
+                         precision=precision, tolerance=tolerance)
 
 
 def spmm(m: COOMatrix, b: jnp.ndarray, *, strategy: str = "auto",
-         reuse: Optional[int] = None) -> jnp.ndarray:
+         reuse: Optional[int] = None, precision=None,
+         tolerance: Optional[float] = None) -> jnp.ndarray:
     """Structure-aware SpMM: ``C = A @ B`` via the default dispatcher.
 
     ``strategy="auto"`` classifies the matrix structure, evaluates each
@@ -783,13 +989,18 @@ def spmm(m: COOMatrix, b: jnp.ndarray, *, strategy: str = "auto",
         b: dense right-hand side, ``[n, d]``.
         strategy: ``"auto"`` or a format from ``FORMATS`` to force.
         reuse: conversion amortization horizon (default 32 executions).
+        precision: ``None`` or a forced precision (see :func:`plan_spmm`).
+        tolerance: accuracy-gate budget enabling reduced precisions; with
+            the default 0.0 dispatch stays fp32-exact.
 
     Returns:
-        ``C`` as a dense ``[n, d]`` array (same dtype family as ``b``).
+        ``C`` as a dense ``[n, d]`` array (in the plan's value dtype:
+        fp32 unless a reduced precision was chosen or forced).
 
     Raises:
-        ValueError: on a shape-incompatible ``b``, or a forced format the
-            applicability policy rejects for this matrix (the error
-            carries the recorded skip reason).
+        ValueError: on a shape-incompatible ``b``, or a forced format /
+            precision the applicability policy rejects for this matrix
+            (the error carries the recorded skip reason).
     """
-    return _DEFAULT.spmm(m, b, strategy=strategy, reuse=reuse)
+    return _DEFAULT.spmm(m, b, strategy=strategy, reuse=reuse,
+                         precision=precision, tolerance=tolerance)

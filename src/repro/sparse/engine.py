@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import as_precision
 from repro.sparse.stream import StreamPlan
 
 #: Default cap on the staged host->device buffer per micro-batch, in
@@ -88,15 +89,29 @@ class ShedError(RuntimeError):
     or the ``"wait"`` timeout expired before space opened up)."""
 
 
+def _stage_dtype(plan: StreamPlan):
+    """The dtype batches are staged (and executed) at for ``plan``.
+
+    A reduced-precision plan's kernels would cast B on device anyway, so
+    the engine casts at staging instead — halving the host->device bytes
+    the double buffering has to hide.  Full-precision plans stage at the
+    stream's declared dtype.
+    """
+    prec = as_precision(plan.dispatch.precision)
+    return prec.value_jnp if prec.reduced else plan.spec.dtype
+
+
 def coalesce_budget(plan: StreamPlan, *,
                     stage_bytes: int = DEFAULT_STAGE_BYTES) -> int:
     """Max total RHS columns one micro-batch may carry for ``plan``.
 
     Two constraints meet here:
 
-    * the staged operand — ``[n, cols]`` float32, concatenated on the
-      host and moved in one ``device_put`` — must fit the staging budget
-      (double buffering keeps two of these alive);
+    * the staged operand — ``[n, cols]`` at the plan's staging dtype
+      (the reduced value dtype for a bf16 plan, else the stream dtype),
+      concatenated on the host and moved in one ``device_put`` — must
+      fit the staging budget (double buffering keeps two of these
+      alive);
     * the batch replays through ``execute_wide`` at the plan's
       ``coalesce_block_d``, so per-launch kernel tiling (including the
       CSR B-slab packed for ``plan_d``) is unchanged by coalescing — the
@@ -113,7 +128,7 @@ def coalesce_budget(plan: StreamPlan, *,
     Returns:
         The column budget (>= ``plan.spec.d``).
     """
-    itemsize = 4
+    itemsize = np.dtype(_stage_dtype(plan)).itemsize
     cap = max(int(stage_bytes) // (plan.n * itemsize), 1)
     d = max(plan.spec.d, 1)
     return max(d, (cap // d) * d)
@@ -359,7 +374,7 @@ class ServingEngine:
                 break
             cols = min(cols * 2, cap)
         for block in classes:
-            b = jnp.zeros((plan.n, block), jnp.float32)
+            b = jnp.zeros((plan.n, block), _stage_dtype(plan))
             jax.block_until_ready(plan.execute_wide(b, block_d=block))
         plan.reset_stats()
         return len(classes)
@@ -502,10 +517,13 @@ class ServingEngine:
         # width-combination, and arrival timing makes nearly every batch
         # a new combination — recompiles would dominate the batch.  One
         # memcpy-shaped concat plus a single device_put is the staging
-        # transfer the double buffering exists to overlap.
-        parts = [np.asarray(r.b) for r in batch]
+        # transfer the double buffering exists to overlap.  Staging casts
+        # to the plan's precision dtype here, on the host, so a bf16 plan
+        # moves half the bytes per batch.
+        stage_dt = np.dtype(_stage_dtype(plan))
+        parts = [np.asarray(r.b, dtype=stage_dt) for r in batch]
         if pad:
-            parts.append(np.zeros((plan.n, pad), parts[0].dtype))
+            parts.append(np.zeros((plan.n, pad), stage_dt))
         wide = parts[0] if len(parts) == 1 else np.concatenate(
             parts, axis=1)
         return _Staged(plan=plan, requests=batch,

@@ -221,6 +221,17 @@ _register(ELLCOOMatrix,
 
 
 # --------------------------------------------------------------------------
+# Precision: the registry's third dispatch axis (after format and backend).
+# The implementation lives in repro.core.precision so the kernel registry
+# can import it without a package cycle; this module is its public home.
+# --------------------------------------------------------------------------
+
+from repro.core.precision import (  # noqa: F401,E402  (re-export)
+    DEFAULT_PRECISION, INT16_MAX_EXTENT, PRECISION_BF16, PRECISION_BF16_I32,
+    PRECISION_FP32, PRECISIONS, Precision, as_precision, int16_extent_ok)
+
+
+# --------------------------------------------------------------------------
 # Converters from the numpy COO patterns (repro.core.patterns.COOMatrix).
 # --------------------------------------------------------------------------
 

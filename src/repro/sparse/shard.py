@@ -57,6 +57,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import sparsity_models as sm
 from repro.core.patterns import COOMatrix
+from repro.core.precision import Precision, as_precision
 from repro.core.roofline import ShardRoofline, collective_time
 from repro.sparse import formats as fmt
 from repro.sparse import stream as _stream
@@ -153,6 +154,19 @@ class ShardedPlan(_stream.StreamPlan):
         self._b_strategy_req = b_strategy
         super().__init__(dispatcher, m, spec, strategy=strategy)
 
+    def _exec_precision(self) -> Precision:
+        """The precision the per-shard kernels actually pack and run at.
+
+        Values follow the plan's precision; indices are pinned to int32
+        because the sharded tier executes jax-backend kernels inside each
+        shard (XLA gathers take int32), so a ``bf16i16`` plan executes as
+        ``bf16i32`` here — same value traffic, wider indices.
+        """
+        prec = as_precision(self.dispatch.precision)
+        if prec.index_dtype != "int32":
+            prec = Precision(prec.value_dtype, "int32")
+        return prec
+
     # ------------------------------------------------------------- #
     # Planning: strategy scoring
     # ------------------------------------------------------------- #
@@ -163,15 +177,17 @@ class ShardedPlan(_stream.StreamPlan):
         fmt_name, d, n, nnz = plan.chosen, plan.d, m.n, max(m.nnz, 1)
         D = self.num_shards
         hw = disp._resolve_hardware(plan.backend)
-        sv = disp.sizeof_val
+        prec = self._exec_precision()
+        sv = prec.sizeof_val
         cand = plan.candidate(fmt_name)
-        ceiling = disp._ceiling(fmt_name, hw, plan.backend).attainable(
+        ceiling = disp._ceiling(fmt_name, hw, plan.backend,
+                                plan.precision).attainable(
             hw.peak_flops, cand.useful_fraction or 1.0, d)
         flops = sm.flops_spmm(nnz, d)
         S = float(n * d * sv)                 # one full B or C buffer
 
         if fmt_name == "dia":
-            dia = disp.convert(m, "dia")
+            dia = disp.convert(m, "dia", precision=prec)
             diag_nnz = np.count_nonzero(np.asarray(dia.data), axis=1)
             band_bounds = fmt.nnz_balanced_splits(diag_nnz, D)
             full_tb = sm.TrafficBreakdown(
@@ -268,11 +284,16 @@ class ShardedPlan(_stream.StreamPlan):
         """KernelContext for the per-shard jax-backend KernelSpec.run."""
         from repro.kernels import registry
         disp, plan = self._dispatcher, self.dispatch
+        prec = self._exec_precision()
+
+        def _convert(mm, format, _prec=prec):
+            return disp.convert(mm, format, precision=_prec)
+
         return registry.KernelContext(
             hardware=disp._resolve_hardware(plan.backend),
             bcsr_block=disp.bcsr_block,
             max_dia_offsets=disp.max_dia_offsets,
-            plan_d=plan.d, convert=disp.convert)
+            plan_d=plan.d, precision=prec, convert=_convert)
 
     def _build_executor(self, fmt_name: str, bounds: np.ndarray):
         """Pack per-shard layouts and compile the strategy's closure.
@@ -303,11 +324,12 @@ class ShardedPlan(_stream.StreamPlan):
         mesh, D, n = self.mesh, self.num_shards, self._m.n
         spec_k = registry.get(fmt_name, "jax")
         ctx = self._kernel_ctx()
+        prec = self._exec_precision()
         rows_per = np.diff(bounds)
         R = int(max(rows_per.max(), 1))
 
         if fmt_name == "csr":
-            csr = disp.convert(m, "csr")
+            csr = disp.convert(m, "csr", precision=prec)
             indptr = np.asarray(csr.indptr)
             data, idx, rid = (np.asarray(csr.data), np.asarray(csr.indices),
                               np.asarray(csr.row_ids))
@@ -332,7 +354,7 @@ class ShardedPlan(_stream.StreamPlan):
                 return spec_k.run(a_loc, b_full, ctx)
 
         elif fmt_name == "ell":
-            ell = disp.convert(m, "ell")
+            ell = disp.convert(m, "ell", precision=prec)
             data, idx = np.asarray(ell.data), np.asarray(ell.indices)
             k = data.shape[1]
             d_s = np.zeros((D, R, k), data.dtype)
@@ -349,7 +371,7 @@ class ShardedPlan(_stream.StreamPlan):
                 return spec_k.run(a_loc, b_full, ctx)
 
         else:                               # bcsr
-            bcsr = disp.convert(m, "bcsr")
+            bcsr = disp.convert(m, "bcsr", precision=prec)
             t = bcsr.t
             bptr = np.asarray(bcsr.block_ptr)
             blocks = np.asarray(bcsr.blocks)
@@ -423,6 +445,8 @@ class ShardedPlan(_stream.StreamPlan):
         mesh, D, n = self.mesh, self.num_shards, self._m.n
         spec_k = registry.get(fmt_name, "jax")
         ctx = self._kernel_ctx()
+        prec = self._exec_precision()
+        vdt = prec.value_jnp                # ml_dtypes type doubles as np
         cols_per = np.diff(bounds)
         Rc = int(max(cols_per.max(), 1))
         Rout = -(-n // D)
@@ -432,11 +456,11 @@ class ShardedPlan(_stream.StreamPlan):
             packs = []
             for i in range(D):
                 sel = (m.cols >= bounds[i]) & (m.cols < bounds[i + 1])
-                packs.append((m.vals[sel].astype(np.float32),
+                packs.append((m.vals[sel].astype(vdt),
                               (m.cols[sel] - bounds[i]).astype(np.int32),
                               m.rows[sel].astype(np.int32)))
                 NNZ = max(NNZ, int(sel.sum()))
-            d_s = np.zeros((D, NNZ), np.float32)
+            d_s = np.zeros((D, NNZ), vdt)
             i_s = np.zeros((D, NNZ), np.int32)
             r_s = np.zeros((D, NNZ), np.int32)
             for i, (v, c, r) in enumerate(packs):
@@ -460,10 +484,10 @@ class ShardedPlan(_stream.StreamPlan):
                                cols=(m.cols[sel] - bounds[i]).astype(
                                    np.int32),
                                vals=m.vals[sel], pattern=m.pattern)
-                e = fmt.coo_to_ell(lm)
+                e = fmt.coo_to_ell(lm, dtype=vdt)
                 locals_ell.append(e)
                 K = max(K, e.k)
-            d_s = np.zeros((D, n, K), np.float32)
+            d_s = np.zeros((D, n, K), vdt)
             i_s = np.zeros((D, n, K), np.int32)
             for i, e in enumerate(locals_ell):
                 d_s[i, :, :e.k] = np.asarray(e.data)
@@ -477,7 +501,7 @@ class ShardedPlan(_stream.StreamPlan):
                 return spec_k.run(a_loc, b_loc, ctx)
 
         else:                               # bcsr
-            bcsr = disp.convert(m, "bcsr")
+            bcsr = disp.convert(m, "bcsr", precision=prec)
             t = bcsr.t
             blocks = np.asarray(bcsr.blocks)
             brows, bcols = (np.asarray(bcsr.block_rows),
@@ -540,7 +564,7 @@ class ShardedPlan(_stream.StreamPlan):
         """
         disp, m = self._dispatcher, self._m
         mesh, D, n = self.mesh, self.num_shards, self._m.n
-        dia = disp.convert(m, "dia")
+        dia = disp.convert(m, "dia", precision=self._exec_precision())
         offs = np.asarray(dia.offsets, dtype=np.int32)
         data = np.asarray(dia.data)
         K = int(max(np.diff(bounds).max(), 1))
@@ -558,8 +582,11 @@ class ShardedPlan(_stream.StreamPlan):
             idx = r[None, :] + offsets[:, None]          # [K, n]
             valid = (idx >= 0) & (idx < n)
             g = b_full[jnp.clip(idx, 0, n - 1)]          # [K, n, d]
-            contrib = jnp.where(valid[..., None], dat[..., None] * g, 0.0)
-            return contrib.sum(0)                        # [n, d]
+            # Products round at the storage dtype; the band reduction
+            # accumulates in fp32 per the precision contract.
+            prod = (dat[..., None] * g).astype(jnp.float32)
+            contrib = jnp.where(valid[..., None], prod, 0.0)
+            return contrib.sum(0).astype(b_full.dtype)   # [n, d]
 
         if self.b_strategy == "replicate":
             body = shard_map(
@@ -629,6 +656,9 @@ class ShardedPlan(_stream.StreamPlan):
             "devices": self.num_shards,
             "b_strategy": self.b_strategy,
             "partition": self.partition,
+            # Per-shard kernels run the jax backend (int32 gathers), so a
+            # bf16i16 plan executes shards at bf16i32.
+            "shard_precision": self._exec_precision().token,
             "shard_nnz": [int(x) for x in self.shard_nnz],
         })
         return out

@@ -17,7 +17,12 @@ but traverse different host-prepared orders:
   rowsplit_spmm  equal-nnz chunk traversal (merge-path load balance).
   ell_coo_spmm   vectorized ELL body + COO-tail gather/segment-sum.
 
-All return C = A @ B with C: [n, d].
+All return C = A @ B with C: [n, d] in the operand dtype.  Reduced
+precisions (bf16 containers + bf16 B) round only the *products*:
+every accumulation runs in fp32 (explicit upcast before the segment
+sum / scan carry, ``preferred_element_type`` on the matmuls) and the
+result is cast back once at the end — the same contract as the Pallas
+kernels' fp32 VMEM accumulators.
 """
 from __future__ import annotations
 
@@ -36,7 +41,9 @@ def csr_spmm(a: CSRMatrix, b: jnp.ndarray) -> jnp.ndarray:
     """C[r] += val * B[c] for every nonzero (r, c, val)."""
     gathered = b[a.indices]                       # [nnz, d] random gather
     scaled = gathered * a.data[:, None]           # [nnz, d]
-    return jax.ops.segment_sum(scaled, a.row_ids, num_segments=a.n)
+    out = jax.ops.segment_sum(scaled.astype(jnp.float32), a.row_ids,
+                              num_segments=a.n)
+    return out.astype(b.dtype)
 
 
 @jax.jit
@@ -47,12 +54,12 @@ def ell_spmm(a: ELLMatrix, b: jnp.ndarray) -> jnp.ndarray:
         acc = carry
         cols = a.indices[:, k]                    # [n]
         vals = a.data[:, k]                       # [n]
-        acc = acc + b[cols] * vals[:, None]
+        acc = acc + (b[cols] * vals[:, None]).astype(jnp.float32)
         return acc, None
 
-    init = jnp.zeros((a.n, b.shape[1]), dtype=b.dtype)
+    init = jnp.zeros((a.n, b.shape[1]), dtype=jnp.float32)
     out, _ = jax.lax.scan(_slot, init, jnp.arange(a.k))
-    return out
+    return out.astype(b.dtype)
 
 
 @jax.jit
@@ -91,11 +98,11 @@ def dia_spmm(a: DIAMatrix, b: jnp.ndarray) -> jnp.ndarray:
         else:
             shifted = jnp.concatenate(
                 [jnp.zeros((-off, d), b.dtype), b[:n + off]])
-        contrib = a.data[i][:, None] * shifted
+        contrib = (a.data[i][:, None] * shifted).astype(jnp.float32)
         out = contrib if out is None else out + contrib
     if out is None:
-        out = jnp.zeros((n, d), dtype=b.dtype)
-    return out
+        out = jnp.zeros((n, d), dtype=jnp.float32)
+    return out.astype(b.dtype)
 
 
 @partial(jax.jit, static_argnames=("block_rows_per_step",))
@@ -110,7 +117,8 @@ def bcsr_spmm_scan(a: BCSRMatrix, b: jnp.ndarray,
 
     def _step(acc, blk):
         block, br, bc = blk
-        prod = block @ b_tiles[bc]
+        prod = jnp.dot(block, b_tiles[bc],
+                       preferred_element_type=jnp.float32)
         acc = acc.at[br].add(prod)
         return acc, None
 
@@ -129,7 +137,9 @@ def binned_spmm(a: BinnedMatrix, b: jnp.ndarray) -> jnp.ndarray:
     """
     gathered = b[a.cols]                          # [nnz, d] slab-local reuse
     scaled = gathered * a.data[:, None]           # [nnz, d]
-    return jax.ops.segment_sum(scaled, a.rows, num_segments=a.n)
+    out = jax.ops.segment_sum(scaled.astype(jnp.float32), a.rows,
+                              num_segments=a.n)
+    return out.astype(b.dtype)
 
 
 @jax.jit
@@ -140,7 +150,9 @@ def rowsplit_spmm(a: RowSplitMatrix, b: jnp.ndarray) -> jnp.ndarray:
         return jnp.zeros((a.n, b.shape[1]), dtype=b.dtype)
     gathered = b[a.cols]                          # [P, d]
     scaled = gathered * a.data[:, None]           # [P, d]
-    return jax.ops.segment_sum(scaled, a.rows, num_segments=a.n)
+    out = jax.ops.segment_sum(scaled.astype(jnp.float32), a.rows,
+                              num_segments=a.n)
+    return out.astype(b.dtype)
 
 
 @jax.jit
@@ -152,16 +164,16 @@ def ell_coo_spmm(a: ELLCOOMatrix, b: jnp.ndarray) -> jnp.ndarray:
         acc = carry
         cols = a.body_indices[:, k]               # [n]
         vals = a.body_data[:, k]                  # [n]
-        acc = acc + b[cols] * vals[:, None]
+        acc = acc + (b[cols] * vals[:, None]).astype(jnp.float32)
         return acc, None
 
-    init = jnp.zeros((a.n, b.shape[1]), dtype=b.dtype)
+    init = jnp.zeros((a.n, b.shape[1]), dtype=jnp.float32)
     out, _ = jax.lax.scan(_slot, init, jnp.arange(a.k_cut))
     if a.tail_data.shape[0]:
         tail = b[a.tail_cols] * a.tail_data[:, None]     # [tail_nnz, d]
-        out = out + jax.ops.segment_sum(tail, a.tail_rows,
-                                        num_segments=a.n)
-    return out
+        out = out + jax.ops.segment_sum(tail.astype(jnp.float32),
+                                        a.tail_rows, num_segments=a.n)
+    return out.astype(b.dtype)
 
 
 def dense_spmm(a_dense: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -61,11 +61,21 @@ class BSpec:
             fast-steady-state ones.
         dtype: element dtype of the stream (informational; kernels follow
             the dtype of each ``B`` actually passed).
+        precision: optional storage precision to force on the plan — a
+            :class:`repro.core.precision.Precision` or a token like
+            ``"bf16"`` / ``"bf16i32"``.  ``None`` (default) lets the
+            dispatcher pick per the roofline and the accuracy gate.
+        tolerance: elementwise accuracy budget handed to the dispatcher's
+            precision gate; reduced-precision candidates become eligible
+            only when ``tolerance`` covers their rounding eps (see
+            ``Dispatcher.plan``).  ``None`` uses the dispatcher default.
     """
 
     d: int
     reuse: int = 32
     dtype: Any = jnp.float32
+    precision: Any = None
+    tolerance: Optional[float] = None
 
     def __post_init__(self):
         """Validate widths and horizons at construction time."""
@@ -128,7 +138,9 @@ class StreamPlan:
         self._strategy = strategy
         self.spec = spec
         self.dispatch = dispatcher.plan(m, spec.d, strategy=strategy,
-                                        reuse=spec.reuse)
+                                        reuse=spec.reuse,
+                                        precision=spec.precision,
+                                        tolerance=spec.tolerance)
         # Eager bind: conversion + packing happen NOW, not on first
         # execute.  (The first execute still pays the kernel's one-time
         # XLA compile for this shape — latency-sensitive servers should
@@ -156,6 +168,13 @@ class StreamPlan:
     def chosen(self) -> str:
         """The format the amortized roofline model selected."""
         return self.dispatch.chosen
+
+    @property
+    def precision(self) -> str:
+        """The storage-precision token the plan executes at (e.g.
+        ``"f32i32"`` or ``"bf16i16"``); replays pack values and indices
+        at these dtypes and accumulate in fp32."""
+        return self.dispatch.precision
 
     def _check(self, b: jnp.ndarray, *, width: Optional[int] = None) -> None:
         """Reject shape-mismatched operands with a precise message."""
@@ -409,7 +428,8 @@ class StreamPlan:
         """Amortization audit: planned horizon vs realized executions.
 
         Returns:
-            Dict with ``chosen``, ``regime``, ``backend``, ``planned_reuse``,
+            Dict with ``chosen``, ``regime``, ``backend``, ``precision``
+            (the storage-dtype token replays run at), ``planned_reuse``,
             ``executed``, ``reuse_utilization`` (executed / planned —
             below 1.0 means the conversion cost was amortized over fewer
             calls than the model assumed), and ``replan_suggested`` (the
@@ -420,6 +440,7 @@ class StreamPlan:
             "chosen": self.dispatch.chosen,
             "regime": self.dispatch.regime,
             "backend": self.dispatch.backend,
+            "precision": self.dispatch.precision,
             "planned_reuse": self.spec.reuse,
             "executed": self.executed,
             "reuse_utilization": self.executed / self.spec.reuse,
@@ -429,6 +450,7 @@ class StreamPlan:
 
 def plan(m: COOMatrix, b_spec: Union[int, BSpec, jnp.ndarray], *,
          strategy: str = "auto", reuse: Optional[int] = None,
+         precision=None, tolerance: Optional[float] = None,
          mesh=None, b_strategy: str = "auto",
          dispatcher: Optional[_dispatch.Dispatcher] = None) -> StreamPlan:
     """Plan once for a stream of right-hand sides; the serving entry point.
@@ -440,6 +462,12 @@ def plan(m: COOMatrix, b_spec: Union[int, BSpec, jnp.ndarray], *,
         strategy: ``"auto"`` or a format name to force.
         reuse: shorthand override for ``BSpec.reuse`` (expected number of
             executions).
+        precision: shorthand override for ``BSpec.precision`` — force the
+            plan onto one storage precision (``"bf16"``, ``"bf16i32"``, a
+            :class:`~repro.core.precision.Precision`).
+        tolerance: shorthand override for ``BSpec.tolerance`` — the
+            accuracy budget that lets the dispatcher consider
+            reduced-precision candidates on its own.
         mesh: optional device mesh (e.g. from ``repro.launch.mesh``).
             When given, returns a :class:`repro.sparse.shard.ShardedPlan`
             that partitions the matrix across the mesh and executes under
@@ -455,6 +483,11 @@ def plan(m: COOMatrix, b_spec: Union[int, BSpec, jnp.ndarray], *,
         given); call ``execute`` / ``execute_many`` / ``execute_wide``.
     """
     spec = as_b_spec(b_spec, reuse=reuse)
+    if precision is not None or tolerance is not None:
+        spec = dataclasses.replace(
+            spec,
+            precision=spec.precision if precision is None else precision,
+            tolerance=spec.tolerance if tolerance is None else tolerance)
     disp = dispatcher or _dispatch.default_dispatcher()
     if mesh is not None:
         from repro.sparse.shard import ShardedPlan

@@ -185,3 +185,92 @@ from repro.data import corpus as _corpus  # noqa: E402
 @pytest.mark.parametrize("d", [1, 8])
 def test_all_pairs_match_dense_on_vendored_corpus(entry, d):
     _check_all_pairs(entry.load(), d)
+
+
+# --------------------------------------------------------------------- #
+# Precision sweep: every (format, backend) pair at every Precision it
+# declares, against the float64 dense reference.  The tolerance is the
+# accumulation-contract bound, not a flat constant: products round at
+# the operand dtype and accumulate in fp32, so the elementwise error is
+# bounded by O(eps_dtype * (|A| @ |B|)).  A flat bf16 tolerance would
+# either mask real packing bugs on small magnitudes or flake on hub
+# rows; the elementwise bound does neither.
+# --------------------------------------------------------------------- #
+
+def _check_all_pairs_at_precision(m: COOMatrix, d: int,
+                                  prec: sparse.Precision,
+                                  seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    b = np.asarray(rng.normal(size=(m.n, d)).astype(np.float32))
+    dense = np.asarray(fmt.coo_to_dense(m), np.float64)
+    ref = dense @ b.astype(np.float64)
+    # 4x headroom: A rounds once, B rounds once, each product rounds
+    # once, and the output casts back to b.dtype once.
+    bound = (4.0 * prec.eps * (np.abs(dense) @ np.abs(b).astype(np.float64))
+             + ATOL + RTOL * np.abs(ref))
+    ctx = registry.KernelContext(hardware=HOST_CPU, bcsr_block=8,
+                                 precision=prec)
+    bj = jnp.asarray(b)
+    covered = 0
+    for format, backend in PAIRS:
+        if not registry.get(format, backend).supports_precision(prec):
+            continue                  # declared unsupported: not a skip
+        try:
+            out = registry.spmm(m, bj, format=format, backend=backend,
+                                ctx=ctx)
+        except ValueError as e:       # converter policy gate
+            assert format not in NEVER_SKIP, (
+                f"{format}/{backend} skipped at {prec.token}: {e}")
+            continue
+        err = np.abs(np.asarray(out, np.float64) - ref)
+        worst = float(np.max(err - bound)) if err.size else 0.0
+        assert np.all(err <= bound), (
+            f"{format}/{backend} at {prec.token} exceeds the "
+            f"eps-scaled bound on {m.pattern} (n={m.n}, d={d}) by "
+            f"{worst:.3e}")
+        covered += 1
+    # The CSR-family pallas kernels declare all three precisions, so a
+    # sweep that covers nothing means the registry surface regressed.
+    assert covered > 0, f"no pair ran precision {prec.token}"
+
+
+@settings(max_examples=24, deadline=None)
+@given(structure=st.sampled_from(("banded", "block", "scale_free",
+                                  "uniform")),
+       prec=st.sampled_from(sparse.PRECISIONS),
+       d=st.sampled_from((1, 8, 33)),
+       seed=st.integers(0, 4))
+def test_all_pairs_match_dense_at_declared_precisions(structure, prec, d,
+                                                      seed):
+    _check_all_pairs_at_precision(_structured(structure, 24, seed), d,
+                                  prec, seed=seed)
+
+
+@pytest.mark.parametrize("case", sorted(ADVERSARIAL))
+def test_all_pairs_match_dense_on_adversarial_bf16_i16(case):
+    _check_all_pairs_at_precision(ADVERSARIAL[case], 8,
+                                  sparse.PRECISION_BF16)
+
+
+# --------------------------------------------------------------------- #
+# int16 extent legality at the boundary.  The packers reserve sentinel
+# slots equal to the extent itself, so the extent — not extent - 1 —
+# must be representable: 2**15 - 1 is the largest legal extent and
+# exactly 2**15 is illegal.
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=40, deadline=None)
+@given(extent=st.integers(2 ** 15 - 8, 2 ** 15 + 8))
+def test_int16_extent_legality_at_boundary(extent):
+    from repro.kernels.csr_spmm import index_extent_check
+    legal = extent <= sparse.INT16_MAX_EXTENT
+    assert sparse.int16_extent_ok(extent) == legal
+    assert sparse.PRECISION_BF16.index_ok(extent) == legal
+    # int32 never gates at this scale.
+    assert sparse.PRECISION_BF16_I32.index_ok(extent)
+    index_extent_check(extent, np.int32)          # never raises
+    if legal:
+        index_extent_check(extent, np.int16)
+    else:
+        with pytest.raises(ValueError, match="int16"):
+            index_extent_check(extent, np.int16)

@@ -101,6 +101,53 @@ def test_binned_model_wins_high_skew_on_bandwidth_bound_hw():
     assert plan.chosen in GATHER_FAMILY
 
 
+@pytest.mark.parametrize("structure,d", [("uniform", 8), ("uniform", 64),
+                                         ("scale_free", 8),
+                                         ("scale_free", 64)])
+def test_reduced_precision_roofline_gain_on_bandwidth_bound_hw(structure, d):
+    """The tentpole's model-level claim, deterministic: on a
+    bandwidth-bound part (TPU v5e) the roofline must predict >= 1.5x
+    attainable GFLOP/s for bf16 values + int16 indices over fp32 + int32
+    on the CSR-family kernels for bandwidth-bound structures (uniform /
+    scale-free at d >= 8) — halving the bytes-per-nonzero on a
+    memory-bound kernel halves its time bound.  (The measured form is
+    soft-reported by benchmarks/run.py's bf16 smoke lane.)"""
+    from repro.core.hardware import TPU_V5E
+    if structure == "uniform":
+        m = erdos_renyi(8192, 16, seed=11)
+    else:
+        m = scale_free(8192, 16, alpha=2.05, seed=11)
+    disp = sparse.Dispatcher(hardware=TPU_V5E, backend="pallas",
+                             calibration=False)
+    # tolerance admits bf16 (eps 2^-7) so the reduced rows rank eligibly.
+    plan = disp.plan(m, d, tolerance=1e-2)
+    gained = []
+    for name in ("csr", "binned", "rowsplit", "ell_coo"):
+        lo = plan.candidate(name, "bf16i16")
+        hi = plan.candidate(name, "f32i32")
+        if not (lo.eligible and hi.eligible):
+            continue                  # structure-gated format: not at issue
+        # Halved bytes-per-nonzero must exactly double the modeled AI.
+        assert lo.ai == pytest.approx(2.0 * hi.ai, rel=1e-6)
+        # The >= 1.5x attainable claim holds wherever the bf16 row is
+        # still under the memory roof; rows the compact layout promotes
+        # all the way into the compute-bound regime are the win itself,
+        # not an exception (their gain is capped by the ceiling).
+        ceiling_capped = (lo.predicted_gflops
+                          < TPU_V5E.attainable(lo.ai) / 1e9 * 0.999)
+        if not ceiling_capped:
+            assert lo.predicted_gflops >= 1.5 * hi.predicted_gflops, (
+                f"{name} @ d={d} ({structure}): bf16i16 predicts "
+                f"{lo.predicted_gflops:.1f} GF/s vs f32i32 "
+                f"{hi.predicted_gflops:.1f} GF/s")
+            gained.append(name)
+    # Non-vacuity: every swept config keeps >= 1 CSR-family format under
+    # the memory roof at bf16i16 with the full >= 1.5x predicted gain.
+    assert gained, f"no bandwidth-bound CSR-family row at d={d}"
+    # The winning plan itself runs reduced under this tolerance.
+    assert plan.precision in ("bf16i16", "bf16i32")
+
+
 def test_skip_reasons_recorded():
     plan = sparse.plan_spmm(_mats()["random"], 16)
     # Random sparsity at avg degree 8: DIA is hopeless and says why.

@@ -9,6 +9,13 @@ from repro.core import blocked as gen_blocked
 from repro.core import erdos_renyi
 from repro.kernels import ref
 
+# This module deliberately exercises the deprecated container-level
+# wrappers in repro.kernels.ops (they expose packing knobs — row_tile,
+# chunk, b_tile, block_d — the registry derives itself); the registry
+# path is covered by test_registry / test_differential.  Silence the
+# DeprecationWarning they now raise, except in the explicit test below.
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 RNG = np.random.default_rng(0)
 
 
@@ -286,3 +293,14 @@ def test_kernel_rooflines():
     g = kernels.grouped_matmul_roofline(4096, 4096, 1536, 128)
     assert g.mxu_utilization == 1.0   # block-diagonal: every block dense
     assert g.ai > r.ai                # MoE blocks beat generic sparse blocks
+
+
+def test_ops_wrappers_raise_deprecation_warning():
+    """The container-level wrappers warn callers toward the registry."""
+    m = gen_blocked(64, t=16, num_blocks=4, nnz_per_block=20, seed=9)
+    a = sparse.coo_to_bcsr(m, 16)
+    b = _b(64, 8)
+    with pytest.warns(DeprecationWarning, match="registry"):
+        kernels.bcsr_spmm(a, b, block_d=8)
+    with pytest.warns(DeprecationWarning, match="registry"):
+        kernels.csr_spmm(sparse.coo_to_csr(m), b, chunk=32, block_d=8)

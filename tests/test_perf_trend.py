@@ -35,7 +35,8 @@ def test_parse_and_compare(tmp_path):
         _row("band", "stream_r8", 64, 4.0),
         "malformed,row",
     ]))
-    assert prev[("er", "csr", "16")] == 2.0
+    # Pre-dtype-column CSVs key as f32i32 (what those cells ran at).
+    assert prev[("er", "csr", "16", "f32i32")] == 2.0
     assert len(prev) == 3                      # malformed row skipped
     cur = pt.parse_csv(_csv(tmp_path, "cur.csv", [
         _row("er", "csr", 16, 1.0),            # 50% drop -> regression
@@ -45,7 +46,7 @@ def test_parse_and_compare(tmp_path):
     ]))
     regs = pt.compare(prev, cur, threshold=0.10)
     assert [(k, round(drop, 2)) for k, _, _, drop in regs] == \
-        [(("er", "csr", "16"), 0.5)]
+        [(("er", "csr", "16", "f32i32"), 0.5)]
 
 
 def test_main_soft_warn_vs_strict(tmp_path, capsys):
@@ -83,8 +84,9 @@ def test_trend_window_median_baseline(tmp_path):
                                        4.0)]),
     ]
     prev = pt.baseline_window([pathlib.Path(p) for p in runs])
-    assert prev[("er", "csr", "16")] == 2.2       # median, not the spike
-    assert prev[("band", "shard8_all_gather", "64")] == 4.0   # partial cell
+    assert prev[("er", "csr", "16", "f32i32")] == 2.2   # median, not spike
+    assert prev[("band", "shard8_all_gather", "64",
+                 "f32i32")] == 4.0                      # partial cell
 
     # 2.0 is an 80% drop vs the spike but <10% vs the median: the window
     # is what makes --strict survivable.
@@ -95,6 +97,30 @@ def test_trend_window_median_baseline(tmp_path):
     # Against the spike alone the same run hard-fails.
     assert pt.main(["--previous", str(runs[1]), "--current", str(cur),
                     "--strict"]) == 1
+
+
+def test_dtype_column_keys_cells_separately(tmp_path):
+    """bf16-lane rows never trend against fp32 baselines: the dtype
+    column is part of the cell key, and rows from CSVs written before
+    the column existed land under f32i32."""
+    pt = _load()
+    dt_header = HEADER + ",dtype"
+    path = tmp_path / "mixed.csv"
+    path.write_text("\n".join([
+        dt_header,
+        _row("er", "csr", 16, 2.0) + ",f32i32",
+        _row("er", "csr", 16, 1.0) + ",bf16i32",
+    ]) + "\n")
+    prev = pt.parse_csv(path)
+    assert prev[("er", "csr", "16", "f32i32")] == 2.0
+    assert prev[("er", "csr", "16", "bf16i32")] == 1.0
+    # A bf16 current run compares only against the bf16 cell: the 50%
+    # gap to the fp32 baseline is not a regression.
+    cur = tmp_path / "cur.csv"
+    cur.write_text("\n".join([dt_header,
+                              _row("er", "csr", 16, 1.0) + ",bf16i32"])
+                   + "\n")
+    assert pt.compare(prev, pt.parse_csv(cur), threshold=0.10) == []
 
 
 def test_main_disjoint_schemas(tmp_path, capsys):

@@ -40,18 +40,24 @@ import statistics
 import sys
 from typing import Dict, List, Tuple
 
-Key = Tuple[str, str, str]          # (matrix, impl, d)
+Key = Tuple[str, str, str, str]     # (matrix, impl, d, dtype)
 
 
 def parse_csv(path: pathlib.Path,
               metric: str = "gflops") -> Dict[Key, float]:
-    """Read one benchmark CSV into ``(matrix, impl, d) -> metric``."""
+    """Read one benchmark CSV into ``(matrix, impl, d, dtype) -> metric``.
+
+    ``dtype`` is the storage-precision token column; CSVs written before
+    it existed key as ``f32i32`` (what those cells actually ran at), so
+    a bf16 lane's cells never trend against fp32 baselines.
+    """
     rows: Dict[Key, float] = {}
     with open(path, newline="", encoding="utf-8") as f:
         for rec in csv.DictReader(f):
             try:
-                rows[(rec["matrix"], rec["impl"], rec["d"])] = float(
-                    rec[metric])
+                key = (rec["matrix"], rec["impl"], rec["d"],
+                       rec.get("dtype") or "f32i32")
+                rows[key] = float(rec[metric])
             except (KeyError, TypeError, ValueError):
                 continue            # malformed/partial row: skip, don't die
     return rows
@@ -139,8 +145,8 @@ def main(argv: List[str]) -> int:
     print(f"perf-trend: {len(shared)} comparable cells, "
           f"{len(regressions)} regressed >{args.threshold:.0%}, "
           f"{improved} improved >{args.threshold:.0%}")
-    for (matrix, impl, d), p, c, drop in regressions:
-        msg = (f"{matrix}/{impl}/d={d}: {p:.3f} -> {c:.3f} "
+    for (matrix, impl, d, dtype), p, c, drop in regressions:
+        msg = (f"{matrix}/{impl}/d={d}/{dtype}: {p:.3f} -> {c:.3f} "
                f"{args.metric} ({drop:.0%} drop)")
         # GitHub annotation so the warning surfaces on the PR checks page.
         print(f"::warning title=SpMM perf regression::{msg}")
